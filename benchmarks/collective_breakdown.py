@@ -1,0 +1,37 @@
+"""Attribute collective traffic to model operations via HLO op_name metadata.
+
+    PYTHONPATH=src python -m benchmarks.collective_breakdown dump.hlo [N]
+"""
+import re
+import sys
+from collections import defaultdict
+
+from repro.parallel.hlo_analysis import COLLECTIVES, _RING, HloModule
+
+
+def breakdown(path, top=25):
+    m = HloModule(open(path).read())
+    rows = defaultdict(float)
+    for (comp, name), ins in m.instrs.items():
+        op = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+        if op not in COLLECTIVES or ins.opcode.endswith("-done"):
+            continue
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", ins.rhs)
+        n = int(gm.group(2)) if gm else 1
+        base = ins.result_bytes if op in ("all-gather", "all-to-all") \
+            else max(ins.result_bytes, m._operand_bytes(ins))
+        byt = _RING[op](n) * base * m.multiplier.get(comp, 1)
+        om = re.search(r'op_name="([^"]+)"', ins.rhs)
+        label = om.group(1) if om else name
+        # strip jit prefixes/indices for grouping
+        label = re.sub(r"\[[^\]]*\]", "", label)
+        rows[(op, label[:110])] += byt
+    out = sorted(rows.items(), key=lambda kv: -kv[1])
+    total = sum(rows.values())
+    print(f"total collective bytes/chip: {total/1e9:.1f} GB")
+    for (op, label), byt in out[:top]:
+        print(f"{byt/1e9:9.1f} GB  {op:18s} {label}")
+
+
+if __name__ == "__main__":
+    breakdown(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 25)

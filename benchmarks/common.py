@@ -1,0 +1,101 @@
+"""Shared harness for the paper-reproduction benchmarks (Sec. 9).
+
+The paper's pipelines run 5-6 minutes on a GKE cluster; ours run the same
+event counts with all time constants divided by TIME_SCALE (default 60) so a
+run takes seconds on this container. Overheads are reported RELATIVE (vs the
+no-recovery execution baseline), which is scale-invariant to first order.
+
+Protocols: "none" (execution baseline, NullLogStore), "logio",
+"logio+lineage", "abs".
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (CountWindowOperator, Engine, FailureInjector,
+                        GeneratorSource, LineageScope, MapOperator, Pipeline,
+                        ReadSource, SyncJoinOperator, TerminalSink)
+from repro.core.logstore import MemoryLogStore, NullLogStore
+
+TIME_SCALE = 60.0
+
+
+def t(seconds_in_paper: float) -> float:
+    return seconds_in_paper / TIME_SCALE
+
+
+def payload(kb: float, i: int):
+    return {"i": i, "data": bytes(int(kb * 1024))}
+
+
+def run_pipeline(build: Callable[[], Pipeline], *, protocol: str = "logio",
+                 plan: Sequence[Tuple[str, str, int]] = (),
+                 lineage: Sequence[LineageScope] = (),
+                 abs_epoch: int = 15, timeout: float = 240.0,
+                 restart_delay: float = 0.3 / TIME_SCALE * 60):
+    """Returns (wall_seconds, engine)."""
+    store = NullLogStore() if protocol == "none" else MemoryLogStore()
+    kwargs = dict(store=store, injector=FailureInjector(list(plan)),
+                  mode="thread", restart_delay=restart_delay)
+    if protocol == "abs":
+        kwargs["protocol"] = "abs"
+        kwargs["abs_options"] = {"epoch_events": abs_epoch}
+    if protocol == "logio+lineage":
+        kwargs["lineage_scopes"] = list(lineage)
+    eng = Engine(build(), **kwargs)
+    t0 = time.time()
+    eng.start()
+    ok = eng.wait(timeout)
+    dt = time.time() - t0
+    eng.stop()
+    if not ok:
+        raise TimeoutError(f"pipeline did not finish under {protocol}")
+    return dt, eng
+
+
+def _translate(plan, protocol):
+    """Generic failure points -> protocol-specific crash points.
+    'input' = after processing the nth input event (the paper's failure
+    positions are given in processed-event counts); 'source' likewise."""
+    out = []
+    for (op, point, nth) in plan:
+        if point == "input":
+            point = "abs_input" if protocol == "abs" else "pre_state_update"
+        elif point == "source":
+            point = "abs_source" if protocol == "abs" else "source_pre_log"
+        elif protocol == "abs":
+            point = "abs_input"     # nearest equivalent
+        out.append((op, point, nth))
+    return out
+
+
+def bench(name: str, build, *, protocols=("none", "logio", "abs"),
+          plans=None, lineage=(), abs_epoch=15, repeats: int = 3,
+          rows: Optional[list] = None):
+    """Run (protocol x plan) cells; emit CSV rows
+    name,us_per_call,derived where derived = overhead%% vs baseline."""
+    plans = plans or {"normal": []}
+    base_time = None
+    out_rows = rows if rows is not None else []
+    for proto in protocols:
+        for plan_name, plan in plans.items():
+            if proto == "none" and plan:
+                continue    # baseline is failure-free by definition
+            times = []
+            for _ in range(repeats):
+                dt, eng = run_pipeline(build, protocol=proto,
+                                       plan=_translate(plan, proto),
+                                       lineage=lineage, abs_epoch=abs_epoch)
+                times.append(dt)
+            best = min(times)
+            if proto == "none":
+                base_time = best
+            over = (100.0 * (best - base_time) / base_time
+                    if base_time else float("nan"))
+            row = (f"{name}/{proto}/{plan_name}", best * 1e6, round(over, 1))
+            out_rows.append(row)
+            print(f"{row[0]},{row[1]:.0f},{row[2]}", flush=True)
+    return out_rows

@@ -1,0 +1,42 @@
+"""Attribute dot FLOPs to model operations via op_name metadata.
+
+    PYTHONPATH=src python -m benchmarks.dot_breakdown dump.hlo [N]
+"""
+import re
+import sys
+from collections import defaultdict
+
+from repro.parallel.hlo_analysis import HloModule
+
+
+def breakdown(path, top=20):
+    m = HloModule(open(path).read())
+    rows = defaultdict(float)
+    for (comp, name), ins in m.instrs.items():
+        if ins.opcode != "dot":
+            continue
+        res = ins.result_dims
+        n = 1
+        for d in res:
+            n *= d
+        contract = 1
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rhs)
+        lhs = m._operand_dims(ins, 0)
+        if cm and lhs:
+            for ci in cm.group(1).split(","):
+                if ci:
+                    contract *= lhs[int(ci)]
+        fl = 2.0 * n * contract * m.multiplier.get(comp, 1)
+        om = re.search(r'op_name="([^"]+)"', ins.rhs)
+        label = om.group(1) if om else name
+        label = re.sub(r"\[[^\]]*\]", "", label)
+        rows[label[:110]] += fl
+    out = sorted(rows.items(), key=lambda kv: -kv[1])
+    total = sum(rows.values())
+    print(f"total dot flops/chip: {total:.3e}")
+    for label, fl in out[:top]:
+        print(f"{fl:10.2e}  {label}")
+
+
+if __name__ == "__main__":
+    breakdown(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 20)

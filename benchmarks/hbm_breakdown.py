@@ -1,0 +1,60 @@
+"""Attribute HBM traffic to model operations via HLO op_name metadata.
+
+    PYTHONPATH=src python -m benchmarks.hbm_breakdown dump.hlo [N]
+"""
+import re
+import sys
+from collections import defaultdict
+
+from repro.parallel.hlo_analysis import (_FUSABLE, _NO_TRAFFIC, _SKIP_OPS,
+                                         HloModule)
+
+
+def breakdown(path, top=30):
+    m = HloModule(open(path).read())
+    rows = defaultdict(float)
+    for comp in m.comp_instrs:
+        if "fused_computation" in comp:
+            continue
+        counts = m._consumer_counts(comp)
+        mul = m.multiplier.get(comp, 1)
+
+        def absorbed(name):
+            ins = m.instrs.get((comp, name))
+            return (ins is not None and ins.opcode in _FUSABLE
+                    and counts[name] == 1)
+
+        def external_inputs(ins, seen):
+            b = 0.0
+            for opn in ins.operands:
+                if opn in seen:
+                    continue
+                seen.add(opn)
+                src = m.instrs.get((comp, opn))
+                if src is None:
+                    continue
+                if absorbed(opn):
+                    b += external_inputs(src, seen)
+                elif src.opcode not in _NO_TRAFFIC:
+                    b += src.result_bytes
+            return b
+
+        for n in m.comp_instrs[comp]:
+            ins = m.instrs[(comp, n)]
+            if ins.opcode in _SKIP_OPS or ins.opcode in _NO_TRAFFIC \
+                    or absorbed(n):
+                continue
+            byt = (ins.result_bytes + external_inputs(ins, set())) * mul
+            om = re.search(r'op_name="([^"]+)"', ins.rhs)
+            label = om.group(1) if om else f"{ins.opcode}:{n}"
+            label = re.sub(r"\[[^\]]*\]", "", label)
+            rows[(ins.opcode, label[:100])] += byt
+    out = sorted(rows.items(), key=lambda kv: -kv[1])
+    total = sum(rows.values())
+    print(f"total hbm bytes/chip: {total/1e9:.1f} GB")
+    for (op, label), byt in out[:top]:
+        print(f"{byt/1e9:9.1f} GB  {op:16s} {label}")
+
+
+if __name__ == "__main__":
+    breakdown(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 30)

@@ -1,0 +1,32 @@
+"""Fig. 10: data lineage capture overhead — the paper's headline <1.5%.
+
+Same UC1 pipelines run with LOG.io vs LOG.io+lineage (scope covering every
+operator); derived column = overhead of lineage relative to plain LOG.io."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import run_pipeline
+from benchmarks.uc1 import build_uc1
+from repro.core import LineageScope
+
+SCOPES = [LineageScope(("OP1", "out"), ("OP4", "out"))]
+
+
+def run(rows, repeats=3, full=False):
+    cases = {
+        "1000ev": dict(n_events=1000, rate_s=0.1, op2_pt=0.05, op3_pt=0.5,
+                       op3_window=2, op4_window=100),
+        "5000ev": dict(n_events=5000, rate_s=0.03, op2_pt=0.05, op3_pt=0.1,
+                       op3_window=2, op4_window=250),
+    }
+    for name, kw in cases.items():
+        build = build_uc1(**kw)
+        base = min(run_pipeline(build, protocol="logio")[0]
+                   for _ in range(repeats))
+        lin = min(run_pipeline(build, protocol="logio+lineage",
+                               lineage=SCOPES)[0] for _ in range(repeats))
+        over = 100.0 * (lin - base) / base
+        row = (f"lineage_fig10_{name}", lin * 1e6, round(over, 2))
+        rows.append(row)
+        print(f"{row[0]},{row[1]:.0f},{row[2]}", flush=True)

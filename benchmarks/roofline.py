@@ -1,0 +1,75 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and emits the
+three-term analysis per (arch x shape x mesh): compute/memory/collective
+seconds, dominant term, 6ND/HLO useful-flops ratio, MFU upper bound.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(outdir="results/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        d = json.load(open(f))
+        if d.get("status") == "ok":
+            cells.append(d)
+    return cells
+
+
+def table(cells, mesh="16x16"):
+    rows = []
+    for d in cells:
+        if d["mesh"] != mesh:
+            continue
+        r = d["roofline"]
+        m = d["memory_analysis"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"],
+            "hbm_gb": m["peak_hbm_bytes"] / 1e9,
+            "fits": m["fits_16GB"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful": d.get("useful_flops_ratio"),
+            "mfu_ub": r["mfu_upper_bound"],
+        })
+    return rows
+
+
+def run(rows_out, repeats=None, full=False, outdir="results/dryrun"):
+    cells = load(outdir)
+    for mesh in ("16x16", "2x16x16"):
+        n_ok = sum(1 for c in cells if c["mesh"] == mesh)
+        rows_out.append((f"dryrun_cells_ok_{mesh}", n_ok, ""))
+        print(f"dryrun_cells_ok_{mesh},{n_ok},", flush=True)
+    for r in table(cells):
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        step_ms = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        rows_out.append((name, round(step_ms), f"dom={r['dominant']};"
+                         f"mfu_ub={r['mfu_ub'] and round(r['mfu_ub'], 3)};"
+                         f"fits={r['fits']}"))
+        print(f"{name},{round(step_ms)},{rows_out[-1][2]}", flush=True)
+
+
+def print_markdown(outdir="results/dryrun", mesh="16x16"):
+    cells = load(outdir)
+    rows = table(cells, mesh)
+    hdr = ("| arch | shape | HBM GB | fits | compute ms | memory ms | "
+           "collective ms | dominant | 6ND/HLO | MFU_ub |")
+    print(hdr)
+    print("|" + "---|" * 10)
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['hbm_gb']:.2f} | "
+              f"{'Y' if r['fits'] else 'N'} | {r['compute_s']*1e3:.1f} | "
+              f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+              f"{r['dominant']} | "
+              f"{r['useful'] and round(r['useful'], 3)} | "
+              f"{r['mfu_ub'] and round(r['mfu_ub'], 3)} |")
+
+
+if __name__ == "__main__":
+    import sys
+    print_markdown(mesh=sys.argv[1] if len(sys.argv) > 1 else "16x16")

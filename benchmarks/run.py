@@ -1,0 +1,43 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * uc1_fig5..9, uc2_fig11, uc3_fig12/13 — total pipeline wall time per
+    (protocol x failure plan); derived = overhead %% vs the no-recovery
+    execution baseline (the paper's Figures 5-9/11-13).
+  * lineage_fig10 — lineage-capture overhead vs plain LOG.io (<1.5% claim).
+  * roofline/* — per (arch x shape) dry-run step-time lower bound (us) and
+    dominant roofline term (EXPERIMENTS.md §Roofline reads the same data).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--repeats N]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale repeats + the largest configurations")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma list: uc1,uc2,uc3,lineage,roofline")
+    args = ap.parse_args()
+    repeats = args.repeats or (3 if args.full else 2)
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import lineage_overhead, roofline, uc1, uc2, uc3
+    rows = []
+    print("name,us_per_call,derived")
+    for name, mod in (("uc1", uc1), ("uc2", uc2), ("uc3", uc3),
+                      ("lineage", lineage_overhead), ("roofline", roofline)):
+        if only and name not in only:
+            continue
+        try:
+            mod.run(rows, repeats=repeats, full=args.full)
+        except Exception as e:   # keep the suite going; record the failure
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+    return rows
+
+
+if __name__ == '__main__':
+    main()

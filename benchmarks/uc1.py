@@ -1,0 +1,105 @@
+"""Use Case 1 (Sec. 9.2, Figs. 5-9): linear pipeline with straggler OP3.
+
+OP1 source -> OP2 stateless (fast) -> OP3 stateful (straggler, varying
+processing time) -> OP4 stateful writer -> OP5 sink. All time constants are
+the paper's divided by TIME_SCALE.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench, payload, t
+from repro.core import (CountWindowOperator, GeneratorSource, MapOperator,
+                        Pipeline, ReadSource, TerminalSink)
+
+
+def build_uc1(*, n_events: int, rate_s: float, op2_pt: float, op3_pt: float,
+              op3_window: int, op4_window: int, kb: float = 10.0):
+    events = [payload(kb, i) for i in range(n_events)]
+    n3 = n_events // op3_window
+    n4 = n3 // op4_window
+
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource("OP1", ReadSource(events),
+                                      rate=t(rate_s)))
+        p.add(lambda: MapOperator("OP2", fn=lambda b: b,
+                                  processing_time=t(op2_pt)))
+        p.add(lambda: CountWindowOperator(
+            "OP3", op3_window, agg=lambda bs: {"n": len(bs)},
+            processing_time=t(op3_pt)))
+        p.add(lambda: CountWindowOperator(
+            "OP4", op4_window, agg=lambda bs: {"n": len(bs)},
+            writes_per_output=1, processing_time=t(op2_pt)))
+        p.add(lambda: TerminalSink("OP5", target=max(n4, 1)))
+        p.connect("OP1", "out", "OP2", "in")
+        p.connect("OP2", "out", "OP3", "in")
+        p.connect("OP3", "out", "OP4", "in")
+        p.connect("OP4", "out", "OP5", "in")
+        return p
+    return build
+
+
+def fig5(rows, repeats):
+    """100 events @500ms, OP3 100x straggler (5s), failures in OP4."""
+    build = build_uc1(n_events=100, rate_s=0.5, op2_pt=0.05, op3_pt=5.0,
+                      op3_window=2, op4_window=10)
+    bench("uc1_fig5", build, repeats=repeats, rows=rows,
+          plans={"normal": [],
+                 "1fail_OP4": [("OP4", "input", 1)],
+                 "2fail_OP4": [("OP4", "input", 1), ("OP4", "input", 23)],
+                 "3fail_OP4": [("OP4", "input", 1), ("OP4", "input", 23),
+                               ("OP4", "input", 45)]},
+          abs_epoch=15)
+
+
+def fig6(rows, repeats):
+    """Event-size sensitivity during normal processing (10KB -> 1MB)."""
+    for kb in (10, 100, 1024):
+        build = build_uc1(n_events=60, rate_s=0.5, op2_pt=0.05, op3_pt=5.0,
+                          op3_window=2, op4_window=10, kb=kb)
+        bench(f"uc1_fig6_{kb}kb", build, repeats=repeats, rows=rows,
+              protocols=("none", "logio", "abs"))
+
+
+def fig7(rows, repeats):
+    """1000 events @100ms, OP3 10x straggler (500ms), failures in OP4."""
+    build = build_uc1(n_events=1000, rate_s=0.1, op2_pt=0.05, op3_pt=0.5,
+                      op3_window=2, op4_window=100)
+    bench("uc1_fig7", build, repeats=repeats, rows=rows,
+          plans={"normal": [],
+                 "1fail_OP4": [("OP4", "input", 10)],
+                 "3fail_OP4": [("OP4", "input", 10), ("OP4", "input", 148),
+                               ("OP4", "input", 375)]},
+          abs_epoch=150)
+
+
+def fig8(rows, repeats):
+    """Same pipeline, failures in the straggler OP3 itself."""
+    build = build_uc1(n_events=1000, rate_s=0.1, op2_pt=0.05, op3_pt=0.5,
+                      op3_window=2, op4_window=100)
+    bench("uc1_fig8", build, repeats=repeats, rows=rows,
+          plans={"normal": [],
+                 "1fail_OP3": [("OP3", "input", 10)],
+                 "3fail_OP3": [("OP3", "input", 10), ("OP3", "input", 295),
+                               ("OP3", "input", 745)]},
+          abs_epoch=150)
+
+
+def fig9(rows, repeats):
+    """5000 events @30ms, near-uniform operator times — LOG.io's worst case
+    (pessimistic logging cannot hide behind a straggler)."""
+    build = build_uc1(n_events=5000, rate_s=0.03, op2_pt=0.05, op3_pt=0.1,
+                      op3_window=2, op4_window=250)
+    bench("uc1_fig9", build, repeats=repeats, rows=rows,
+          plans={"normal": [],
+                 "1fail_OP4": [("OP4", "input", 10)],
+                 "3fail_OP4": [("OP4", "input", 10), ("OP4", "input", 495),
+                               ("OP4", "input", 1750)]},
+          abs_epoch=500)
+
+
+def run(rows, repeats=3, full=False):
+    fig5(rows, repeats)
+    fig6(rows, repeats if full else 1)
+    fig7(rows, repeats)
+    fig8(rows, repeats if full else 1)
+    fig9(rows, repeats if full else 1)

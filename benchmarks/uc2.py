@@ -1,0 +1,46 @@
+"""Use Case 2 (Fig. 11): two parallel paths synchronized at a writer OP4 —
+exercises ABS marker alignment; failures in the fast path OP2."""
+from __future__ import annotations
+
+from benchmarks.common import bench, payload, t
+from repro.core import (GeneratorSource, MapOperator, Pipeline, ReadSource,
+                        SyncJoinOperator, TerminalSink)
+
+
+def build_uc2(*, n_events: int = 1000, rate_s: float = 0.1,
+              op2_pt: float = 0.05, op3_pt: float = 0.5,
+              n_fast: int = 50, n_slow: int = 100, kb: float = 10.0):
+    events = [payload(kb, i) for i in range(n_events)]
+    n_out = min(n_events // n_fast, n_events // n_slow)
+
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource("OP1", ReadSource(events),
+                                      rate=t(rate_s)))
+        p.add(lambda: MapOperator("OP2", fn=lambda b: b,
+                                  processing_time=t(op2_pt)))
+        p.add(lambda: MapOperator("OP3", fn=lambda b: b,
+                                  processing_time=t(op3_pt)))
+        p.add(lambda: SyncJoinOperator(
+            "OP4", n_fast, n_slow,
+            agg=lambda a, b: {"na": len(a), "nb": len(b)},
+            writes_per_output=1))
+        p.add(lambda: TerminalSink("OP5", target=max(n_out, 1)))
+        p.connect("OP1", "out", "OP2", "in")
+        p.connect("OP1", "out", "OP3", "in")
+        p.connect("OP2", "out", "OP4", "in1")
+        p.connect("OP3", "out", "OP4", "in2")
+        p.connect("OP4", "out", "OP5", "in")
+        return p
+    return build
+
+
+def run(rows, repeats=3, full=False):
+    build = build_uc2()
+    bench("uc2_fig11", build, repeats=repeats, rows=rows,
+          plans={"normal": [],
+                 "1fail_OP2": [("OP2", "input", 147)],
+                 "3fail_OP2": [("OP2", "input", 147),
+                               ("OP2", "input", 457),
+                               ("OP2", "input", 825)]},
+          abs_epoch=150)

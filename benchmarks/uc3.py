@@ -1,0 +1,58 @@
+"""Use Case 3 (Figs. 12-13): data parallelization — Dispatcher + 2 replicas
+of a slow stateless OP3 + Merger; failures hit one replica while the other
+keeps processing (LOG.io non-blocking advantage)."""
+from __future__ import annotations
+
+from benchmarks.common import bench, payload, t
+from repro.core import (CountWindowOperator, GeneratorSource, MapOperator,
+                        Pipeline, ReadSource, TerminalSink)
+from repro.core.scaling import DispatcherOperator, MergerOperator
+
+
+def build_uc3(*, n_events: int = 1000, rate_s: float = 0.1,
+              op3_pt: float = 0.5, op5_window: int = 100, kb: float = 10.0):
+    events = [payload(kb, i) for i in range(n_events)]
+    n_out = n_events // op5_window
+
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource("OP1", ReadSource(events),
+                                      rate=t(rate_s)))
+        p.add(lambda: DispatcherOperator("OP2", ["r0", "r1"]))
+        p.add(lambda: MapOperator("r0", fn=lambda b: b,
+                                  processing_time=t(op3_pt)))
+        p.add(lambda: MapOperator("r1", fn=lambda b: b,
+                                  processing_time=t(op3_pt)))
+        p.add(lambda: MergerOperator("OP4", ["r0", "r1"]))
+        p.add(lambda: CountWindowOperator(
+            "OP5", op5_window, agg=lambda bs: {"n": len(bs)},
+            writes_per_output=1))
+        p.add(lambda: TerminalSink("OP6", target=max(n_out, 1)))
+        p.connect("OP1", "out", "OP2", "in")
+        p.connect("OP2", "to_r0", "r0", "in")
+        p.connect("OP2", "to_r1", "r1", "in")
+        p.connect("r0", "out", "OP4", "from_r0")
+        p.connect("r1", "out", "OP4", "from_r1")
+        p.connect("OP4", "out", "OP5", "in")
+        p.connect("OP5", "out", "OP6", "in")
+        return p
+    return build
+
+
+def run(rows, repeats=3, full=False):
+    build = build_uc3()
+    bench("uc3_fig12", build, repeats=repeats, rows=rows,
+          plans={"normal": [],
+                 "1fail_replica": [("r0", "input", 20)],
+                 "3fail_replica": [("r0", "input", 20),
+                                   ("r1", "input", 220),
+                                   ("r0", "input", 330)]},
+          abs_epoch=150)
+    if full:
+        fast = build_uc3(n_events=5000, rate_s=0.03, op3_pt=0.1,
+                         op5_window=200)
+        bench("uc3_fig13", fast, repeats=repeats,
+              rows=rows,
+              plans={"normal": [],
+                     "1fail_replica": [("r0", "input", 10)]},
+              abs_epoch=500)

@@ -1,0 +1,3 @@
+"""repro — LOG.io (unified rollback recovery + data lineage) on a multi-pod
+JAX training/serving framework. See README.md / DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,11 @@
+# The paper's primary contribution: LOG.io unified rollback recovery +
+# fine-grain data lineage capture for distributed data pipelines.
+from repro.core.builtin import (CountWindowOperator, GeneratorSource,
+                                MapOperator, SyncJoinOperator, TerminalSink)
+from repro.core.channels import Channel
+from repro.core.engine import Engine, FailureInjector, Pipeline
+from repro.core.events import Event, ReadAction
+from repro.core.lineage import LineageScope, backward, enabled_ports, forward
+from repro.core.logstore import MemoryLogStore, SqliteLogStore, TxnAborted
+from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
+                                 ReadSource, SimulatedCrash)

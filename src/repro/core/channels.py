@@ -1,0 +1,86 @@
+"""Reliable FIFO channels with capacity back-pressure (Sec. 2.1).
+
+Semantics:
+  * ``put`` blocks while the buffer is full (back-pressure); a blocked put
+    aborts if the engine is stopping.
+  * ``peek``/``ack``: the receiver *peeks* the head, runs its State-Update
+    transaction, then ``ack``s to remove it — an event leaves the channel
+    only once acknowledged (assigned an InSet_ID). A receiver crash between
+    peek and ack leaves the event in place.
+  * Channel contents survive operator restarts (the transport is the
+    reliable piece, like the in-house TCP messaging + buffers in SAP DI).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Optional
+
+from repro.core.events import Event
+
+
+class ChannelClosed(Exception):
+    pass
+
+
+class Channel:
+    def __init__(self, send_op: str, send_port: str, rec_op: str,
+                 rec_port: str, capacity: int = 64):
+        self.send_op, self.send_port = send_op, send_port
+        self.rec_op, self.rec_port = rec_op, rec_port
+        self.capacity = capacity
+        self._buf = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self.total_put = 0
+
+    @property
+    def name(self) -> str:
+        return f"{self.send_op}.{self.send_port}->{self.rec_op}.{self.rec_port}"
+
+    def put(self, ev: Event, stop_flag=None, timeout: float = 0.05) -> bool:
+        """Blocking put with back-pressure. Returns False if stopping."""
+        with self._cv:
+            while len(self._buf) >= self.capacity:
+                if self._closed or (stop_flag is not None and stop_flag()):
+                    return False
+                self._cv.wait(timeout)
+            self._buf.append(ev)
+            self.total_put += 1
+            self._cv.notify_all()
+            return True
+
+    def try_put(self, ev: Event) -> bool:
+        with self._cv:
+            if len(self._buf) >= self.capacity:
+                return False
+            self._buf.append(ev)
+            self.total_put += 1
+            self._cv.notify_all()
+            return True
+
+    def peek(self) -> Optional[Event]:
+        with self._cv:
+            return self._buf[0] if self._buf else None
+
+    def ack(self) -> Optional[Event]:
+        with self._cv:
+            ev = self._buf.popleft() if self._buf else None
+            self._cv.notify_all()
+            return ev
+
+    def __len__(self):
+        with self._cv:
+            return len(self._buf)
+
+    def clear(self):
+        """Used only by the ABS baseline (global restart discards in-flight
+        events) — never by LOG.io recovery."""
+        with self._cv:
+            self._buf.clear()
+            self._cv.notify_all()
+
+    def close(self):
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()

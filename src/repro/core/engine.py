@@ -1,0 +1,378 @@
+"""Pipeline engine: graph wiring, group execution (threads ≈ pods),
+failure injection, warm restart + recovery, lineage configuration.
+
+Two protocols share the substrate:
+  * ``protocol="logio"`` — this paper (pessimistic logging, non-blocking
+    recovery; only failed groups restart).
+  * ``protocol="abs"``   — the baseline (Sec. 8.1): aligned barrier
+    snapshotting, global restart from the last complete epoch
+    (see ``repro.core.abs``).
+
+Two execution modes:
+  * ``mode="thread"`` — one thread per group, real back-pressure and timing
+    (used by the benchmarks that reproduce Sec. 9).
+  * ``mode="step"``   — deterministic single-threaded round-robin (used by
+    the hypothesis property tests; failures injected at exact points).
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.builtin import GeneratorSource
+from repro.core.channels import Channel
+from repro.core.events import Event
+from repro.core.lineage import LineageScope, enabled_ports
+from repro.core.logstore import MemoryLogStore
+from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
+                                 SimulatedCrash)
+from repro.core.recovery import recover_operator
+
+
+class FailureInjector:
+    """Crash the pipeline at precise points.
+
+    plan entries: (op_id, point, nth) — raise SimulatedCrash the nth time
+    ``crash_point(op_id, point)`` fires (1-based). point="*" matches any.
+    """
+
+    def __init__(self, plan: Sequence[Tuple[str, str, int]] = ()):
+        self.plan = list(plan)
+        self.counts: Dict[Tuple[str, str], int] = collections.defaultdict(int)
+        self.fired: List[Tuple[str, str, int]] = []
+        self.lock = threading.Lock()
+
+    def __call__(self, op_id: str, point: str):
+        with self.lock:
+            for key in ((op_id, point), (op_id, "*")):
+                self.counts[key] += 1 if key[1] == point else 0
+            self.counts[(op_id, point)] += 0   # ensure key
+            n_point = self.counts[(op_id, point)]
+            self.counts[(op_id, "*")] += 1
+            n_any = self.counts[(op_id, "*")]
+            for i, (o, p, nth) in enumerate(self.plan):
+                if o != op_id:
+                    continue
+                if (p == point and n_point == nth) or (p == "*" and n_any == nth):
+                    self.fired.append((o, p, nth))
+                    del self.plan[i]
+                    raise SimulatedCrash(f"{op_id}@{point}#{nth}")
+
+
+class Pipeline:
+    """Declarative pipeline graph; operators given as factories so restarts
+    build fresh instances (volatile state loss)."""
+
+    def __init__(self):
+        self.factories: Dict[str, Callable[[], Operator]] = {}
+        self.connections: List[Tuple[str, str, str, str, int]] = []
+        self.groups: Dict[str, str] = {}
+
+    def add(self, factory: Callable[[], Operator], group: Optional[str] = None
+            ) -> str:
+        op = factory()
+        self.factories[op.id] = factory
+        self.groups[op.id] = group or op.id
+        return op.id
+
+    def connect(self, src: str, src_port: str, dst: str, dst_port: str,
+                capacity: int = 256):
+        self.connections.append((src, src_port, dst, dst_port, capacity))
+
+    def successors(self, op_id: str) -> List[str]:
+        return [c[2] for c in self.connections if c[0] == op_id]
+
+    def predecessors(self, op_id: str) -> List[str]:
+        return [c[0] for c in self.connections if c[2] == op_id]
+
+    def edges(self) -> List[Tuple[Tuple[str, str], Tuple[str, str]]]:
+        return [((s, sp), (d, dp)) for s, sp, d, dp, _ in self.connections]
+
+
+class Engine:
+    def __init__(self, pipeline: Pipeline, *,
+                 store: Optional[MemoryLogStore] = None,
+                 external: Optional[ExternalSystem] = None,
+                 protocol: str = "logio",
+                 lineage_scopes: Sequence[LineageScope] = (),
+                 injector: Optional[FailureInjector] = None,
+                 mode: str = "thread",
+                 restart_delay: float = 0.05,
+                 replay_ops: Sequence[str] = (),
+                 abs_options: Optional[dict] = None):
+        self.pipeline = pipeline
+        self.store = store or MemoryLogStore()
+        self.external = external or ExternalSystem()
+        self.protocol = protocol
+        self.lineage_scopes = list(lineage_scopes)
+        self.injector = injector or FailureInjector()
+        self.mode = mode
+        self.restart_delay = restart_delay
+        self.replay_ops = set(replay_ops)
+        self.abs_options = abs_options or {}
+
+        self._stop = threading.Event()
+        self._done = threading.Event()
+        self.ops: Dict[str, Operator] = {}
+        self.runtimes: Dict[str, OperatorRuntime] = {}
+        self.channels: List[Channel] = []
+        self.threads: Dict[str, threading.Thread] = {}
+        self.group_state: Dict[str, str] = {}
+        self.failures = 0
+        self.restarts = 0
+        self._kill_requests: set = set()
+        self._restart_lock = threading.Lock()
+        self._lineage_ports = enabled_ports(pipeline, self.lineage_scopes)
+        self._build(first=True)
+
+    # ------------------------------------------------------------------
+    def _build(self, first: bool, only_group: Optional[str] = None,
+               restarted: bool = False):
+        cap_override = None if self.mode == "thread" else 1_000_000
+        if first:
+            for (s, sp, d, dp, cap) in self.pipeline.connections:
+                self.channels.append(Channel(s, sp, d, dp,
+                                             cap_override or cap))
+        for op_id, factory in self.pipeline.factories.items():
+            if only_group and self.pipeline.groups[op_id] != only_group:
+                continue
+            op = factory()
+            assert op.id == op_id
+            op.state = "restarted" if restarted else "running"
+            self.ops[op_id] = op
+            self._wire(op)
+            lin_in, lin_out = self._lineage_ports.get(op_id, (set(), set()))
+            self.runtimes[op_id] = OperatorRuntime(
+                op, self.store,
+                lineage_in=lin_in, lineage_out=lin_out,
+                external=self.external,
+                crash_point=self.injector,
+                stop_flag=self._stop.is_set,
+                replay_mode=op_id in self.replay_ops,
+                keep_state_history=bool(lin_out),
+            )
+        for g in set(self.pipeline.groups.values()):
+            if only_group and g != only_group:
+                continue
+            self.group_state[g] = "running"
+
+    def _wire(self, op: Operator):
+        op.in_channels = {}
+        op.out_channels = {p: [] for p in op.output_ports}
+        for ch in self.channels:
+            if ch.rec_op == op.id:
+                op.in_channels[ch.rec_port] = ch
+            if ch.send_op == op.id:
+                op.out_channels.setdefault(ch.send_port, []).append(ch)
+
+    def group_ops(self, group: str) -> List[str]:
+        return [o for o, g in self.pipeline.groups.items() if g == group]
+
+    # ------------------------------------------------------------------
+    def signal_done(self):
+        self._done.set()
+
+    def kill_group(self, group: str):
+        """External kill switch (node failure simulation, thread mode)."""
+        self._kill_requests.add(group)
+
+    def start(self):
+        if self.protocol == "abs":
+            from repro.core.abs import AbsEngineDriver
+            self._abs = AbsEngineDriver(self, **self.abs_options)
+            self._abs.start()
+            return
+        for g in set(self.pipeline.groups.values()):
+            self._start_group(g, recover=False)
+
+    def _start_group(self, group: str, recover: bool):
+        t = threading.Thread(target=self._run_group, args=(group, recover),
+                             daemon=True, name=f"grp-{group}")
+        self.threads[group] = t
+        t.start()
+
+    def _run_group(self, group: str, recover: bool):
+        try:
+            if recover:
+                for op_id in self.group_ops(group):
+                    self._recover_op(self.ops[op_id])
+            while not self._stop.is_set() and not self._done.is_set():
+                if self.group_state.get(group) == "removed":
+                    return
+                if group in self._kill_requests:
+                    self._kill_requests.discard(group)
+                    raise SimulatedCrash(f"external kill of {group}")
+                progressed = False
+                for op_id in self.group_ops(group):
+                    op = self.ops.get(op_id)
+                    if op is not None:
+                        progressed |= self._step_op(op)
+                if not progressed:
+                    if self._sources_exhausted() and self._all_idle():
+                        time.sleep(0.01)
+                        if self._sources_exhausted() and self._all_idle():
+                            self._done.set()
+                            return
+                    time.sleep(0.001)
+        except SimulatedCrash as e:
+            self._on_crash(group, e)
+
+    # ------------------------------------------------------------------
+    def _step_op(self, op: Operator) -> bool:
+        rt = self.runtimes[op.id]
+        if isinstance(op, GeneratorSource):
+            return op.step()
+        progressed = False
+        for port in op.input_ports:
+            ch = op.in_channels.get(port)
+            if ch is None:
+                continue
+            ev = ch.peek()
+            if ev is not None:
+                rt.handle_input(port, ev)
+                progressed = True
+        return progressed
+
+    def _recover_op(self, op: Operator):
+        rt = self.runtimes[op.id]
+        is_source = isinstance(op, GeneratorSource)
+        replay_pred_ports = {dp for s, sp, d, dp, _ in
+                             self.pipeline.connections
+                             if d == op.id and s in self.replay_ops}
+        recover_operator(rt, is_source=is_source,
+                         source_driver=GeneratorSource.driver
+                         if is_source else None,
+                         replay_pred_ports=replay_pred_ports)
+
+    def _replay_cascade(self, failed_group: str) -> List[str]:
+        """Replay predecessors (transitively through replay ops) of the
+        failed group's operators — they must restart in state 'replay'
+        (Sec. 5.2)."""
+        frontier = set(self.group_ops(failed_group))
+        cascade: set = set()
+        while True:
+            preds = {s for s, sp, d, dp, _ in self.pipeline.connections
+                     if d in frontier and s in self.replay_ops} - cascade                 - set(self.group_ops(failed_group))
+            if not preds:
+                break
+            cascade |= preds
+            frontier = preds
+        return sorted({self.pipeline.groups[o] for o in cascade})
+
+    def _on_crash(self, group: str, exc: SimulatedCrash):
+        self.failures += 1
+        self.group_state[group] = "dead"
+        # volatile state of every op in the group is lost; logs+channels live
+        def restart():
+            if self.restart_delay > 0:
+                time.sleep(self.restart_delay)     # warm pod restart
+            with self._restart_lock:
+                self._build(first=False, only_group=group, restarted=True)
+                self.restarts += 1
+                self.group_state[group] = "running"
+            if self.mode == "thread":
+                self._start_group(group, recover=True)
+        if self.mode == "thread":
+            threading.Thread(target=restart, daemon=True).start()
+        else:
+            restart()
+
+    # ------------------------------------------------------------------
+    def _sources_exhausted(self) -> bool:
+        return all(op.exhausted for op in self.ops.values()
+                   if isinstance(op, GeneratorSource))
+
+    def _all_idle(self) -> bool:
+        if any(s == "dead" for s in self.group_state.values()):
+            return False
+        if any(op.has_pending() for op in self.ops.values()):
+            return False
+        return all(len(ch) == 0 for ch in self.channels)
+
+    def wait(self, timeout: float = 60.0) -> bool:
+        if self.protocol == "abs":
+            return self._abs.wait(timeout)
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            if self._done.is_set():
+                self._stop.set()
+                return True
+            if all(not t.is_alive() for t in self.threads.values()) \
+                    and all(s != "dead" for s in self.group_state.values()):
+                return True
+            time.sleep(0.005)
+        self._stop.set()
+        return False
+
+    def stop(self):
+        self._stop.set()
+        for ch in self.channels:
+            ch.close()
+
+    # ------------------------------------------------------------------
+    # deterministic single-threaded mode (property tests)
+    # ------------------------------------------------------------------
+    def run_to_completion(self, max_steps: int = 200_000) -> bool:
+        assert self.mode == "step"
+        groups = sorted(set(self.pipeline.groups.values()))
+        self._rq: List[str] = []        # ordered recovery queue
+
+        def on_crash(group: str):
+            self.failures += 1
+            replay_groups = self._replay_cascade(group)
+            self._build(first=False, only_group=group, restarted=True)
+            for rg in replay_groups:
+                self._build(first=False, only_group=rg, restarted=True)
+                for oid in self.group_ops(rg):
+                    self.ops[oid].state = "replay"
+            self.restarts += 1
+            # ordering: failed group recovers first (it marks the inputs it
+            # needs as "replay" before the replay preds look for them)
+            fresh = [o for o in self.group_ops(group)]
+            for rg in replay_groups:
+                fresh += self.group_ops(rg)
+            self._rq = fresh + [o for o in self._rq if o not in fresh]
+
+        for _ in range(max_steps):
+            if self._done.is_set():
+                return True
+            # drain pending recoveries first (a recovery can crash too)
+            if self._rq:
+                oid = self._rq[0]
+                op = self.ops.get(oid)
+                try:
+                    if op is not None and op.state in ("restarted", "replay"):
+                        self._recover_op(op)
+                    self._rq.pop(0)
+                except SimulatedCrash:
+                    on_crash(self.pipeline.groups[oid])
+                continue
+            progressed = False
+            for g in groups:
+                if self.group_state.get(g) in ("dead", "removed"):
+                    continue
+                crashed = False
+                for op_id in self.group_ops(g):
+                    op = self.ops.get(op_id)
+                    if op is None:
+                        continue
+                    try:
+                        if op.state in ("restarted", "replay"):
+                            self._recover_op(op)
+                            progressed = True
+                        progressed |= self._step_op(op)
+                    except SimulatedCrash:
+                        on_crash(g)
+                        progressed = True
+                        crashed = True
+                        break
+                if crashed:
+                    break
+            if not progressed:
+                if self._sources_exhausted() and self._all_idle():
+                    return True
+                return self._done.is_set()
+        return False

@@ -1,0 +1,58 @@
+"""Event model: batches of records exchanged between operators (Sec. 2.1).
+
+Each event is identified by a System-generated Sequential Number (SSN),
+unique per (sender operator, output port). Write/read actions are modelled as
+events with a null sender/receiver port respectively (Sec. 3.3 / 3.5.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+UNDONE = "undone"
+DONE = "done"
+REPLAY = "replay"
+
+COMPLETE = "complete"
+INCOMPLETE = "incomplete"
+
+
+@dataclasses.dataclass
+class Event:
+    event_id: int
+    send_op: str
+    send_port: Optional[str]          # None => write action (Sec. 3.5.3)
+    rec_op: Optional[str]
+    rec_port: Optional[str]           # None => read action event (Sec. 3.3)
+    body: Any = None
+    header: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def is_replay(self) -> bool:
+        return bool(self.header.get("replay"))
+
+    def key(self):
+        return (self.send_op, self.send_port, self.event_id)
+
+    def clone_for(self, rec_op: str, rec_port: str) -> "Event":
+        return dataclasses.replace(self, rec_op=rec_op, rec_port=rec_port,
+                                   header=dict(self.header))
+
+
+@dataclasses.dataclass
+class ReadAction:
+    action_id: int
+    op_id: str
+    conn_id: str
+    desc: str
+    replayable: bool = True
+
+
+@dataclasses.dataclass
+class WriteAction:
+    """A pending write action = an output event whose send_port is None and
+    whose rec_port is the connection id of the external system."""
+    event_id: int
+    op_id: str
+    conn_id: str
+    body: Any

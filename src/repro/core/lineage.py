@@ -1,0 +1,126 @@
+"""Data lineage: scopes, path enumeration (Sec. 3.1), and queries (Sec. 7.3).
+
+A scope (start, target) of port ids implicitly defines the data lineage
+paths; for every (OP.in, OP.out) subsequence on a path, capture is enabled
+for those ports of OP. Queries join EVENT_LINEAGE x EVENT_LOG:
+
+  backward(event)  : output event -> InSet_ID -> input events (recursively)
+  forward(event)   : input event -> InSet_IDs it joined -> output events
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Sequence, Set, Tuple
+
+from repro.core.logstore import MemoryLogStore
+
+
+@dataclasses.dataclass(frozen=True)
+class LineageScope:
+    start: Tuple[str, str]     # (op_id, output_port)
+    target: Tuple[str, str]    # (op_id, output_port)
+
+
+def _paths(pipeline, start: Tuple[str, str], target: Tuple[str, str]
+           ) -> List[List[Tuple[str, str]]]:
+    """All port-id paths start -> target over the connection graph."""
+    edges = pipeline.edges()    # ((send_op, send_port), (rec_op, rec_port))
+    # adjacency: an operator's input port leads to all its output ports
+    out_ports: Dict[str, Set[str]] = defaultdict(set)
+    for (s, sp), _ in edges:
+        out_ports[s].add(sp)
+    results = []
+
+    def walk(port, path):
+        if port == target:
+            results.append(path)
+            return
+        op = port[0]
+        # from an output port follow connections to input ports
+        for (s, sp), (d, dp) in edges:
+            if (s, sp) == port:
+                # enter operator d at dp, then leave via each of its outputs
+                for op_out in out_ports.get(d, ()):  # (d, op_out)
+                    if ((d, dp), (d, op_out)) not in [(path[i], path[i + 1])
+                                                      for i in range(len(path) - 1)]:
+                        walk((d, op_out), path + [(d, dp), (d, op_out)])
+                if not out_ports.get(d) and (d, dp) == target:
+                    results.append(path + [(d, dp)])
+
+    walk(start, [start])
+    return results
+
+
+def enabled_ports(pipeline, scopes: Sequence[LineageScope]
+                  ) -> Dict[str, Tuple[Set[str], Set[str]]]:
+    """op_id -> (enabled input ports IN, enabled output ports OUT)."""
+    out: Dict[str, Tuple[Set[str], Set[str]]] = defaultdict(
+        lambda: (set(), set()))
+    for scope in scopes:
+        for path in _paths(pipeline, scope.start, scope.target):
+            # subsequences (OP.in, OP.out)
+            for i in range(len(path) - 1):
+                (op1, p1), (op2, p2) = path[i], path[i + 1]
+                if op1 == op2:      # in -> out inside one operator
+                    ins, outs = out[op1]
+                    ins.add(p1)
+                    outs.add(p2)
+        # the start port itself has capture enabled as an output
+        sop, sport = scope.start
+        out[sop][1].add(sport)
+    return dict(out)
+
+
+# ---------------------------------------------------------------------------
+# queries
+# ---------------------------------------------------------------------------
+
+def backward(store: MemoryLogStore, event_key: Tuple[str, str, int],
+             depth: int = 64) -> List[Tuple[str, str, int]]:
+    """Input events (transitively) used to produce ``event_key`` =
+    (send_op, send_port, event_id). Returns source-most event keys plus all
+    intermediate contributors, ordered."""
+    seen: Set[Tuple] = set()
+    frontier = [event_key]
+    contributors: List[Tuple[str, str, int]] = []
+    for _ in range(depth):
+        nxt = []
+        for ev in frontier:
+            op = ev[0]
+            for inset in store.lineage_insets_of(ev):
+                for ik in store.lineage_events_of_inset(op, inset):
+                    if ik not in seen:
+                        seen.add(ik)
+                        contributors.append(ik)
+                        nxt.append(ik)
+        if not nxt:
+            break
+        frontier = nxt
+    return contributors
+
+
+def forward(store: MemoryLogStore, event_key: Tuple[str, str, int],
+            rec_op: str, depth: int = 64) -> List[Tuple[str, str, int]]:
+    """Output events (transitively) derived from ``event_key`` as consumed
+    by ``rec_op``."""
+    seen: Set[Tuple] = set()
+    results: List[Tuple[str, str, int]] = []
+    frontier = [(event_key, rec_op)]
+    for _ in range(depth):
+        nxt = []
+        for ev, op in frontier:
+            for inset in store.insets_of_event(ev, op):
+                for ok in store.lineage_outputs_of_inset(op, inset):
+                    if ok not in seen:
+                        seen.add(ok)
+                        results.append(ok)
+                        # find consumers of ok
+                        for k, r in list(store.event_log.items()):
+                            if k[:3] == ok and r["rec_op"] is not None \
+                                    and r["rec_op"] != op:
+                                nxt.append((ok, r["rec_op"]))
+        if not nxt:
+            break
+        frontier = nxt
+    return results

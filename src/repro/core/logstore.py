@@ -1,0 +1,433 @@
+"""LOG.io persistent log tables (Sec. 3.2) behind atomic transactions.
+
+Five tables: EVENT_LOG, EVENT_DATA, READ_ACTION, STATE, EVENT_LINEAGE.
+
+Two backends:
+  * ``MemoryLogStore`` — dict-based; transactions buffer mutations and apply
+    them under a lock at commit. A crash between ``begin`` and ``commit``
+    loses exactly the uncommitted buffer (the atomicity the protocol needs).
+  * ``SqliteLogStore``  — durable ACID store (WAL). Stands in for the HANA
+    instance of the paper's implementation (Sec. 6.1); used by the e2e
+    training example and the durability tests.
+
+EVENT_LOG may hold multiple rows per event — one per assigned InSet_ID
+(Sec. 3.4: "as many entries for e are created in EVENT_LOG").
+"""
+from __future__ import annotations
+
+import pickle
+import sqlite3
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.events import DONE, REPLAY, UNDONE, Event
+
+
+class TxnAborted(Exception):
+    """Raised at commit when a conditional mutation fails (e.g. marking a
+    non-existent InSet done — the dynamic-scaling mutual exclusion of
+    Algorithm 13)."""
+
+
+# ---------------------------------------------------------------------------
+# In-memory backend
+# ---------------------------------------------------------------------------
+
+class _MemTxn:
+    def __init__(self, store: "MemoryLogStore"):
+        self.store = store
+        self.ops: List[Tuple] = []
+
+    # -- mutations (buffered) ---------------------------------------------
+    def log_event(self, ev: Event, status: str = UNDONE,
+                  inset_id: Optional[str] = None):
+        self.ops.append(("log_event", ev, status, inset_id))
+
+    def put_event_data(self, ev: Event):
+        self.ops.append(("put_event_data", ev))
+
+    def delete_event_data(self, key):
+        self.ops.append(("delete_event_data", key))
+
+    def set_status(self, key, status: str, inset_id: Optional[str] = "*",
+                   rec_op: Optional[str] = None,
+                   only_status: Optional[str] = None):
+        """key = (send_op, send_port, event_id). rec_op filters to one
+        receiver's rows; only_status makes the flip conditional."""
+        self.ops.append(("set_status", key, status, inset_id, rec_op,
+                         only_status))
+
+    def assign_insets(self, key, inset_ids: List[str], rec_op: str = None):
+        self.ops.append(("assign_insets", key, list(inset_ids), rec_op))
+
+    def set_inset_status(self, rec_op: str, inset_id: str, status: str,
+                         require_rows: bool = False):
+        self.ops.append(("set_inset_status", rec_op, inset_id, status,
+                         require_rows))
+
+    def clear_inset(self, rec_op: str, inset_id: str):
+        self.ops.append(("clear_inset", rec_op, inset_id))
+
+    def put_state(self, op_id: str, state_id: int, blob: bytes,
+                  keep_history: bool = False):
+        self.ops.append(("put_state", op_id, state_id, blob, keep_history))
+
+    def put_lineage(self, event_id: int, send_op: str, send_port: str,
+                    inset_id: str):
+        self.ops.append(("put_lineage", event_id, send_op, send_port, inset_id))
+
+    def put_read_action(self, op_id: str, conn_id: str, action_id: int,
+                        status: str, desc: str):
+        self.ops.append(("put_read_action", op_id, conn_id, action_id,
+                         status, desc))
+
+    def set_read_action_status(self, op_id: str, conn_id: str,
+                               action_id: int, status: str):
+        self.ops.append(("set_read_action_status", op_id, conn_id, action_id,
+                         status))
+
+    def delete_event_rows(self, key):
+        self.ops.append(("delete_event_rows", key))
+
+    def commit(self):
+        self.store._apply(self.ops)
+        self.ops = []
+
+
+class MemoryLogStore:
+    """EVENT_LOG rows: {key: (send_op,send_port,event_id,inset_id|None) ->
+    dict(status=..., rec_op=..., rec_port=...)}."""
+
+    def __init__(self):
+        self.lock = threading.RLock()
+        self.event_log: Dict[Tuple, Dict[str, Any]] = {}
+        self.event_data: Dict[Tuple, Tuple[bytes, bytes]] = {}
+        self.read_actions: Dict[Tuple, Dict[str, Any]] = {}
+        self.state: Dict[str, List[Tuple[int, bytes]]] = {}
+        self.lineage: List[Tuple[int, str, str, str]] = []
+        self.commits = 0
+        self.bytes_written = 0
+
+    def begin(self) -> _MemTxn:
+        return _MemTxn(self)
+
+    # -- application ----------------------------------------------------
+    def _apply(self, ops):
+        with self.lock:
+            # validation pass (conditional ops) before mutation => atomicity
+            for op in ops:
+                if op[0] == "set_inset_status" and op[4]:
+                    rec_op, inset_id = op[1], op[2]
+                    if not any(r.get("inset") == inset_id
+                               and r["rec_op"] == rec_op
+                               for r in self.event_log.values()):
+                        raise TxnAborted(
+                            f"no EVENT_LOG rows for InSet {inset_id}@{rec_op}")
+                if op[0] == "assign_insets":
+                    key, rec = op[1], op[3]
+                    if not any(k[:3] == key and (rec is None or k[3] == rec)
+                               for k in self.event_log):
+                        # event vanished (reassigned by a scale-down, Alg 13)
+                        raise TxnAborted(f"no EVENT_LOG rows for {key}")
+            for op in ops:
+                self._apply_one(op)
+            self.commits += 1
+
+    def _apply_one(self, op):
+        kind = op[0]
+        if kind == "log_event":
+            _, ev, status, inset_id = op
+            key = (ev.send_op, ev.send_port, ev.event_id, ev.rec_op, inset_id)
+            self.event_log[key] = {"status": status, "rec_op": ev.rec_op,
+                                   "rec_port": ev.rec_port, "inset": inset_id}
+        elif kind == "put_event_data":
+            _, ev = op
+            blob = pickle.dumps((ev.header, ev.body))
+            self.bytes_written += len(blob)
+            self.event_data[ev.key()] = blob
+        elif kind == "delete_event_data":
+            self.event_data.pop(op[1], None)
+        elif kind == "set_status":
+            _, key, status, inset_id, rec_op, only_status = op
+            for k in list(self.event_log):
+                if k[:3] != key:
+                    continue
+                if inset_id != "*" and k[4] != inset_id:
+                    continue
+                if rec_op is not None and k[3] != rec_op:
+                    continue
+                if only_status is not None and \
+                        self.event_log[k]["status"] != only_status:
+                    continue
+                self.event_log[k]["status"] = status
+        elif kind == "assign_insets":
+            _, key, insets, rec = op
+            base = key + (rec, None)
+            row = self.event_log.get(base)
+            if row is None:
+                row = next(r for k, r in self.event_log.items()
+                           if k[:3] == key and (rec is None or k[3] == rec))
+            for ins in insets:
+                self.event_log[key + (rec, ins)] = dict(row, inset=ins)
+            if insets and base in self.event_log:
+                del self.event_log[base]
+        elif kind == "set_inset_status":
+            _, rec_op, inset_id, status, _req = op
+            for k, r in self.event_log.items():
+                if r.get("inset") == inset_id and r["rec_op"] == rec_op:
+                    r["status"] = status
+        elif kind == "clear_inset":
+            pass   # event-state clearing is in-memory; log rows stay "done"
+        elif kind == "put_state":
+            _, op_id, state_id, blob, keep = op
+            self.bytes_written += len(blob)
+            hist = self.state.setdefault(op_id, [])
+            if keep:
+                hist.append((state_id, blob))
+            else:
+                self.state[op_id] = [(state_id, blob)]
+        elif kind == "put_lineage":
+            _, event_id, send_op, send_port, inset_id = op
+            self.lineage.append((event_id, send_op, send_port, inset_id))
+        elif kind == "put_read_action":
+            _, op_id, conn_id, action_id, status, desc = op
+            self.read_actions[(op_id, conn_id, action_id)] = {
+                "status": status, "desc": desc}
+        elif kind == "set_read_action_status":
+            _, op_id, conn_id, action_id, status = op
+            k = (op_id, conn_id, action_id)
+            if k in self.read_actions:
+                self.read_actions[k]["status"] = status
+        elif kind == "delete_event_rows":
+            _, key = op
+            for k in list(self.event_log):
+                if k[:3] == key:
+                    del self.event_log[k]
+        elif kind == "reassign_event":
+            # Alg 13 step 1.c: move an undone event to a new destination
+            # (+ new event id); rows already done/acked->done are skipped.
+            _, old_key, old_rec, new_key, tgt_op, tgt_port = op
+            moved = False
+            for k in list(self.event_log):
+                if k[:3] == old_key and (old_rec is None or k[3] == old_rec) \
+                        and self.event_log[k]["status"] == UNDONE:
+                    del self.event_log[k]
+                    moved = True
+            if moved:
+                self.event_log[new_key + (tgt_op, None)] = {
+                    "status": UNDONE, "rec_op": tgt_op, "rec_port": tgt_port,
+                    "inset": None}
+                blob = self.event_data.pop(old_key, None)
+                if blob is not None:
+                    self.event_data[new_key] = blob
+
+    # -- queries ----------------------------------------------------------
+    def _mk_event(self, k, r) -> Event:
+        header, body = ({}, None)
+        blob = self.event_data.get(k[:3])
+        if blob is not None:
+            header, body = pickle.loads(blob)
+        return Event(event_id=k[2], send_op=k[0], send_port=k[1],
+                     rec_op=r["rec_op"], rec_port=r["rec_port"],
+                     body=body, header=dict(header))
+
+    def fetch_resend_events(self, op_id: str) -> List[Tuple[Event, str]]:
+        """Alg 7 step 1: undone, sender==op, InSet null, real output events."""
+        with self.lock:
+            rows = [(k, r) for k, r in self.event_log.items()
+                    if k[0] == op_id and r["status"] in (UNDONE, REPLAY)
+                    and k[4] is None and k[1] is not None
+                    and r["rec_port"] is not None]
+            rows.sort(key=lambda kr: kr[0][2])
+            return [(self._mk_event(k, r), r["status"]) for k, r in rows]
+
+    def fetch_ack_events(self, op_id: str) -> List[Tuple[Event, str, str]]:
+        """Alg 9 step 2: undone, receiver==op, InSet assigned.
+
+        Returns [(event, inset_id, status)] ordered by (rec_port, event_id).
+        """
+        with self.lock:
+            rows = [(k, r) for k, r in self.event_log.items()
+                    if r["rec_op"] == op_id and r["status"] in (UNDONE, REPLAY)
+                    and k[4] is not None]
+            rows.sort(key=lambda kr: (kr[1]["rec_port"] or "", kr[0][2]))
+            return [(self._mk_event(k, r), k[4], r["status"])
+                    for k, r in rows]
+
+    def fetch_replay_outputs(self, op_id: str) -> List[Tuple[int, str, str]]:
+        """Sender-side rows marked REPLAY by consumers (Alg 10 step 2 for an
+        operator restarted in state 'replay'): [(event_id, port, status)]."""
+        with self.lock:
+            return sorted((k[2], k[1], r["status"])
+                          for k, r in self.event_log.items()
+                          if k[0] == op_id and k[1] is not None
+                          and r["status"] == REPLAY and r["rec_port"] is not None)
+
+    def undone_outputs_after(self, op_id: str, port: str, min_id: int
+                             ) -> List[int]:
+        """UNDONE outputs on a port with event_id >= min_id (the 'events
+        sent after those marked replay' of Alg 10 step 2)."""
+        with self.lock:
+            return sorted({k[2] for k, r in self.event_log.items()
+                           if k[0] == op_id and k[1] == port
+                           and r["status"] == UNDONE and k[2] >= min_id})
+
+    def get_write_actions(self, op_id: str) -> List[Event]:
+        """Alg 8: undone events with null sender port for op."""
+        with self.lock:
+            rows = [(k, r) for k, r in self.event_log.items()
+                    if k[0] == op_id and k[1] is None
+                    and r["status"] == UNDONE]
+            rows.sort(key=lambda kr: kr[0][2])
+            return [self._mk_event(k, r) for k, r in rows]
+
+    def get_state(self, op_id: str) -> Optional[bytes]:
+        with self.lock:
+            hist = self.state.get(op_id)
+            return hist[-1][1] if hist else None
+
+    def last_sent_ssn(self, op_id: str) -> Dict[str, int]:
+        """max event_id per output port (Alg 9 step 1)."""
+        with self.lock:
+            out: Dict[str, int] = {}
+            for k in self.event_log:
+                if k[0] == op_id and k[1] is not None:
+                    out[k[1]] = max(out.get(k[1], -1), k[2])
+            return out
+
+    def last_acked(self, op_id: str) -> Dict[str, int]:
+        """max event_id per input port with an assigned InSet (filter base)."""
+        with self.lock:
+            out: Dict[str, int] = {}
+            for k, r in self.event_log.items():
+                if r["rec_op"] == op_id and k[4] is not None:
+                    p = r["rec_port"]
+                    out[p] = max(out.get(p, -1), k[2])
+            return out
+
+    def event_status(self, key, rec_op: Optional[str] = None
+                     ) -> List[Tuple[Optional[str], str]]:
+        with self.lock:
+            return [(k[4], r["status"]) for k, r in self.event_log.items()
+                    if k[:3] == key and (rec_op is None or k[3] == rec_op)]
+
+    def get_read_action(self, op_id: str, conn_id: str):
+        """latest read action for (op, conn)."""
+        with self.lock:
+            cands = [(k, v) for k, v in self.read_actions.items()
+                     if k[0] == op_id and k[1] == conn_id]
+            if not cands:
+                return None, None
+            k, v = max(cands, key=lambda kv: kv[0][2])
+            return k[2], dict(v)
+
+    # lineage queries ----------------------------------------------------
+    def lineage_insets_of(self, event_key) -> List[str]:
+        send_op, send_port, event_id = event_key
+        with self.lock:
+            return [ins for (eid, so, sp, ins) in self.lineage
+                    if (so, sp, eid) == (send_op, send_port, event_id)]
+
+    def lineage_events_of_inset(self, rec_op: str, inset_id: str) -> List[Tuple]:
+        with self.lock:
+            return sorted(k[:3] for k, r in self.event_log.items()
+                          if r["rec_op"] == rec_op and r.get("inset") == inset_id)
+
+    def lineage_outputs_of_inset(self, send_op: str, inset_id: str) -> List[Tuple]:
+        with self.lock:
+            return sorted((so, sp, eid) for (eid, so, sp, ins) in self.lineage
+                          if so == send_op and ins == inset_id)
+
+    def insets_of_event(self, event_key, rec_op: str) -> List[str]:
+        with self.lock:
+            return [k[4] for k, r in self.event_log.items()
+                    if k[:3] == event_key and k[3] == rec_op
+                    and k[4] is not None]
+
+    # GC (Sec. 3.6) --------------------------------------------------------
+    def gc(self, lineage_ops: Iterable[str] = ()):
+        keep_data_for = set(lineage_ops)
+        with self.lock:
+            for k, r in list(self.event_log.items()):
+                if r["status"] == DONE and k[0] not in keep_data_for:
+                    self.event_data.pop(k[:3], None)
+                    if not self.lineage:
+                        del self.event_log[k]
+
+
+# ---------------------------------------------------------------------------
+# SQLite backend — same txn interface, durable
+# ---------------------------------------------------------------------------
+
+class _SqliteTxn(_MemTxn):
+    def __init__(self, store: "SqliteLogStore"):
+        self.store = store
+        self.ops = []
+
+    def commit(self):
+        self.store._apply(self.ops)
+        self.ops = []
+
+
+class SqliteLogStore(MemoryLogStore):
+    """Durable backend: mirrors MemoryLogStore's logic through SQL.
+
+    Implementation note: we reuse the in-memory application logic for the
+    mutation semantics but persist every commit as one SQLite transaction,
+    and rebuild the in-memory image from disk on open ⇒ genuine durability
+    with the exact in-memory read paths.
+    """
+
+    def __init__(self, path: str):
+        super().__init__()
+        self.path = path
+        self.conn = sqlite3.connect(path, check_same_thread=False)
+        self.conn.execute("PRAGMA journal_mode=WAL")
+        self.conn.execute(
+            "CREATE TABLE IF NOT EXISTS wal_ops (seq INTEGER PRIMARY KEY "
+            "AUTOINCREMENT, blob BLOB)")
+        self.conn.commit()
+        self._replay_from_disk()
+
+    def begin(self):
+        return _SqliteTxn(self)
+
+    def _replay_from_disk(self):
+        cur = self.conn.execute("SELECT blob FROM wal_ops ORDER BY seq")
+        for (blob,) in cur.fetchall():
+            ops = pickle.loads(blob)
+            try:
+                MemoryLogStore._apply(self, ops)
+            except TxnAborted:
+                pass
+
+    def _apply(self, ops):
+        with self.lock:
+            blob = pickle.dumps(ops)
+            MemoryLogStore._apply(self, ops)      # validates + mutates image
+            self.conn.execute("INSERT INTO wal_ops (blob) VALUES (?)", (blob,))
+            self.conn.commit()                    # durable point
+            self.bytes_written += len(blob)
+
+    def close(self):
+        self.conn.close()
+
+
+# ---------------------------------------------------------------------------
+# Null backend — the benchmarks' "execution baseline" (no rollback recovery)
+# ---------------------------------------------------------------------------
+
+class _NullTxn(_MemTxn):
+    def commit(self):
+        self.ops = []
+
+
+class NullLogStore(MemoryLogStore):
+    """No-op store: pipelines run with zero logging (no recovery possible).
+    Used to measure the paper's 'execution baseline' (Sec. 9.3.1)."""
+
+    def begin(self):
+        return _NullTxn(self)
+
+    def _apply(self, ops):
+        pass

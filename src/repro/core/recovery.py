@@ -1,0 +1,143 @@
+"""LOG.io rollback recovery (Algorithms 6-9) + replay mode (Algorithms 10-11).
+
+Recovery of an operator OP (state "restarted"):
+  1. recover output events: resend everything "undone" + unacknowledged
+     (InSet null) in increasing event_id order (Alg 6 step 1 / Alg 7 step 1);
+     replay operators regenerate instead of resending (Alg 10).
+  2. recover pending write actions (Alg 8) — exactly-once via checkable
+     writes.
+  3. recover processing: restore global state + LOG.io context from STATE,
+     re-process "undone"+acknowledged input events against ONLY their
+     assigned Input Set (Alg 9 step 2), trigger generation as it fires.
+  4. resume normal processing.
+
+Replay mode (Sec. 5): a *replay operator* (deterministic + lineage on all
+ports) does not log output payloads. On failure its outputs are regenerated
+from their Input Sets (EVENT_LINEAGE gives output -> InSet). When a consumer
+of a replay operator fails, it marks the inputs it needs as "replay"; the
+engine restarts the replay predecessors in state "replay" and they
+regenerate those outputs (recursively up chains of replay operators).
+"""
+from __future__ import annotations
+
+import pickle
+from typing import TYPE_CHECKING, Dict, List, Optional, Set, Tuple
+
+from repro.core.events import DONE, REPLAY, UNDONE, Event
+from repro.core.operator import Operator, OperatorRuntime
+
+if TYPE_CHECKING:
+    from repro.core.engine import Engine
+
+
+def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
+                     source_driver=None,
+                     replay_pred_ports: Set[str] = frozenset()):
+    """Full recovery sequence for one restarted operator.
+
+    replay_pred_ports: input ports whose senders are replay operators (their
+    payloads are not in EVENT_DATA; regenerated events arrive via channels).
+    """
+    op = rt.op
+    # Alg 9 step 1 / Alg 6 step 2: restore global state + context, advance SSNs
+    rt.restore_state()
+
+    # ---- recover output events --------------------------------------------
+    if rt.replay_mode:
+        _prepare_replay(rt)
+    else:
+        for ev, status in rt.store.fetch_resend_events(op.id):
+            rt._send(ev)
+    rt.crash_point(op.id, "recovery_post_resend")
+
+    # ---- write actions (Alg 8) -------------------------------------------
+    rt.recover_writes()
+
+    # ---- source: resume its read action (Alg 6 steps 3-4) ----------------
+    if is_source and source_driver is not None:
+        source_driver.resume(rt)
+        op.state = "running"
+        return
+
+    # ---- recover processing (Alg 9 step 2 / Alg 11) ----------------------
+    replay_out = getattr(op, "_replay_pending", {})
+    if rt.replay_mode:
+        # rewind SSNs so regenerated events reuse their original ids
+        for (port, eid) in replay_out:
+            rt.ctx.ssn[port] = min(rt.ctx.ssn.get(port, eid), eid)
+    op._awaiting_replay = set()
+    op._replay_pred_ports = set(replay_pred_ports)
+    mark_txn = rt.store.begin()
+    n_marked = 0
+    for ev, inset_id, status in rt.store.fetch_ack_events(op.id):
+        port = ev.rec_port
+        if port in replay_pred_ports and not rt.replay_mode:
+            # Alg 11 step 3: payload unavailable — mark "replay" and await
+            # the regenerated event from the replay predecessor.
+            mark_txn.set_status((ev.send_op, ev.send_port, ev.event_id),
+                                REPLAY, rec_op=op.id)
+            op._awaiting_replay.add((port, ev.event_id, inset_id))
+            n_marked += 1
+            continue
+        if ev.event_id > rt.ctx.global_updated.get(port, -1):
+            op.update_global(ev)
+            rt.ctx.global_updated[port] = ev.event_id
+        # Alg 9 step 2.c: update ONLY the event state for this Input Set
+        op.on_event(ev, recovery_inset=inset_id)
+        for inset in op.triggers():
+            rt.generate(inset, replay_events=replay_out or None)
+    if n_marked:
+        mark_txn.commit()
+    op._replay_pending = {}
+    if rt.replay_mode:
+        # regeneration rewound the SSN counters to reuse original ids;
+        # re-advance past everything logged before resuming (Alg 10 step 3
+        # only applies to the replayed range)
+        for port, last in rt.store.last_sent_ssn(op.id).items():
+            if port in rt.ctx.ssn:
+                rt.ctx.ssn[port] = max(rt.ctx.ssn[port], last + 1)
+    rt.crash_point(op.id, "recovery_post_processing")
+    op.state = "running"
+
+
+def _prepare_replay(rt: OperatorRuntime):
+    """Algorithm 10: determine Input Sets to replay; mark inputs/outputs."""
+    op = rt.op
+    store = rt.store
+    replay_out: Dict[Tuple[str, int], str] = {}
+    insets: Set[str] = set()
+    if op.state == "replay":
+        # outputs marked REPLAY by consumers + UNDONE ones sent after them
+        marked = store.fetch_replay_outputs(op.id)
+        min_per_port: Dict[str, int] = {}
+        for eid, port, _status in marked:
+            min_per_port[port] = min(min_per_port.get(port, eid), eid)
+            replay_out[(port, eid)] = None
+        for port, mn in min_per_port.items():
+            for eid in store.undone_outputs_after(op.id, port, mn):
+                replay_out[(port, eid)] = None
+    # restarted (or replay): also regenerate own unacked undone outputs
+    for ev, status in store.fetch_resend_events(op.id):
+        replay_out[(ev.send_port, ev.event_id)] = None
+    # map each output to its Input Set via EVENT_LINEAGE
+    for (port, eid) in list(replay_out):
+        ins = store.lineage_insets_of((op.id, port, eid))
+        if ins:
+            replay_out[(port, eid)] = ins[0]
+            insets.add(ins[0])
+        else:
+            del replay_out[(port, eid)]     # no lineage -> nothing to do
+    if not replay_out:
+        op._replay_pending = {}
+        return
+    # Alg 10 step 4: atomically mark inputs of those Input Sets as "replay"
+    txn = store.begin()
+    for ins in insets:
+        txn.set_inset_status(op.id, ins, REPLAY)
+    for (port, eid) in replay_out:
+        # flip only still-undone receiver rows (done consumers keep DONE)
+        txn.set_status((op.id, port, eid), REPLAY, only_status=UNDONE)
+    txn.put_state(op.id, rt.new_state_id(), rt._state_blob(),
+                  keep_history=rt.keep_state_history)
+    txn.commit()
+    op._replay_pending = dict(replay_out)

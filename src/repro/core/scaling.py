@@ -1,0 +1,252 @@
+"""Dynamic scaling (Sec. 7.2, Algorithms 12-13): Dispatcher + Merger +
+Controller.
+
+Scale-up: deploy replica (warm start), Merger state update, Dispatcher state
+update — each acknowledged only after persisting the new state in STATE.
+
+Scale-down: the Dispatcher (a) updates its state, (b) computes the set O of
+"undone" events previously sent to the removed replica, (c) atomically
+reassigns them (new destination + new event ids) together with storing its
+state — mutually exclusive with the replica's generation transaction (which
+marks InSets done with ``require_rows``), and (d) re-sends events of O that
+are still undone. Then the Merger drops the input and topology is updated.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.builtin import MapOperator
+from repro.core.channels import Channel
+from repro.core.events import DONE, UNDONE, Event
+from repro.core.logstore import TxnAborted
+from repro.core.operator import Operator, OperatorRuntime
+
+
+class DispatcherOperator(Operator):
+    """Round-robin (optionally key-based) dispatch to replica output ports.
+
+    Global state: the routing table (active replicas) + rr counter.
+    Output ports are ``to_<replica_id>``.
+    """
+    input_ports = ("in",)
+
+    def __init__(self, op_id: str, replicas: List[str],
+                 key_fn: Optional[Callable[[Any], int]] = None,
+                 *, processing_time: float = 0.0):
+        self.routes = list(replicas)          # global state
+        self.rr = 0                           # global state
+        self.output_ports = tuple(f"to_{r}" for r in replicas)
+        super().__init__(op_id, processing_time=processing_time)
+        self.key_fn = key_fn
+        self._queue: List[Tuple[str, Any]] = []
+
+    def on_event(self, event: Event, *, recovery_inset=None) -> List[str]:
+        inset = recovery_inset or self.runtime.new_inset_id()
+        self._queue.append((inset, event.body))
+        return [inset]
+
+    def update_global(self, event: Event):
+        pass    # rr advances at generation (persisted with the txn)
+
+    def global_state(self):
+        return {"routes": list(self.routes), "rr": self.rr}
+
+    def restore_global(self, blob):
+        if blob:
+            self.routes = list(blob["routes"])
+            self.rr = blob["rr"]
+            self._sync_ports()
+
+    def _sync_ports(self):
+        self.output_ports = tuple(f"to_{r}" for r in self.routes)
+        for p in self.output_ports:
+            self.out_channels.setdefault(p, [])
+            self.runtime.ctx.ssn.setdefault(p, 0)
+
+    def triggers(self) -> List[str]:
+        return [i for i, _ in self._queue]
+
+    def generate(self, inset_id: str):
+        body = dict(self._queue)[inset_id]
+        if self.key_fn is not None:
+            r = self.routes[self.key_fn(body) % len(self.routes)]
+        else:
+            r = self.routes[self.rr % len(self.routes)]
+            self.rr += 1
+        return [(f"to_{r}", body)], []
+
+    def clear_inset(self, inset_id: str):
+        self._queue = [(i, b) for i, b in self._queue if i != inset_id]
+
+
+class MergerOperator(Operator):
+    """Bundles replica streams into one output stream. Input ports are
+    ``from_<replica_id>``; active inputs are global state."""
+    output_ports = ("out",)
+
+    def __init__(self, op_id: str, replicas: List[str],
+                 *, processing_time: float = 0.0):
+        self.inputs = list(replicas)          # global state
+        self.input_ports = tuple(f"from_{r}" for r in replicas)
+        super().__init__(op_id, processing_time=processing_time)
+        self._queue: List[Tuple[str, Any]] = []
+
+    def on_event(self, event: Event, *, recovery_inset=None) -> List[str]:
+        inset = recovery_inset or self.runtime.new_inset_id()
+        self._queue.append((inset, event.body))
+        return [inset]
+
+    def global_state(self):
+        return {"inputs": list(self.inputs)}
+
+    def restore_global(self, blob):
+        if blob:
+            self.inputs = list(blob["inputs"])
+            self._sync_ports()
+
+    def _sync_ports(self):
+        self.input_ports = tuple(f"from_{r}" for r in self.inputs)
+        ctx = self.runtime.ctx
+        for p in self.input_ports:
+            ctx.last_acked.setdefault(p, -1)
+            ctx.global_updated.setdefault(p, -1)
+
+    def triggers(self) -> List[str]:
+        return [i for i, _ in self._queue]
+
+    def generate(self, inset_id: str):
+        return [("out", dict(self._queue)[inset_id])], []
+
+    def clear_inset(self, inset_id: str):
+        self._queue = [(i, b) for i, b in self._queue if i != inset_id]
+
+
+class Controller:
+    """Central scaling controller (the paper's Controller, Sec. 7.2).
+    Load-monitoring strategies are out of scope (as in the paper) — tests and
+    examples call scale_up/scale_down directly."""
+
+    def __init__(self, engine, dispatcher_id: str, merger_id: str,
+                 replica_factory: Callable[[str], Callable[[], Operator]],
+                 replica_out_port: str = "out",
+                 replica_in_port: str = "in", capacity: int = 256):
+        self.e = engine
+        self.disp_id = dispatcher_id
+        self.merger_id = merger_id
+        self.replica_factory = replica_factory
+        self.rp_out, self.rp_in = replica_out_port, replica_in_port
+        self.capacity = capacity
+        self.lock = threading.Lock()
+
+    # -- Algorithm 12 -------------------------------------------------------
+    def scale_up(self, replica_id: str):
+        with self.lock:
+            e = self.e
+            # Step 1: deploy replica + create the two connections (warm start)
+            factory = self.replica_factory(replica_id)
+            e.pipeline.factories[replica_id] = factory
+            e.pipeline.groups[replica_id] = replica_id
+            cap = self.capacity if e.mode == "thread" else 1_000_000
+            e.pipeline.connections.append(
+                (self.disp_id, f"to_{replica_id}", replica_id, self.rp_in, cap))
+            e.pipeline.connections.append(
+                (replica_id, self.rp_out, self.merger_id,
+                 f"from_{replica_id}", cap))
+            ch1 = Channel(self.disp_id, f"to_{replica_id}", replica_id,
+                          self.rp_in, cap)
+            ch2 = Channel(replica_id, self.rp_out, self.merger_id,
+                          f"from_{replica_id}", cap)
+            e.channels += [ch1, ch2]
+            op = factory()
+            e.ops[replica_id] = op
+            e._wire(op)
+            e.runtimes[replica_id] = OperatorRuntime(
+                op, e.store, external=e.external, crash_point=e.injector,
+                stop_flag=e._stop.is_set)
+            e.group_state[replica_id] = "running"
+            # Step 2: Merger state update (ack = state persisted)
+            merger = e.ops[self.merger_id]
+            merger.inputs.append(replica_id)
+            merger._sync_ports()
+            e._wire(merger)
+            self._persist(merger)
+            # Step 3: Dispatcher state update
+            disp = e.ops[self.disp_id]
+            disp.routes.append(replica_id)
+            disp._sync_ports()
+            e._wire(disp)
+            self._persist(disp)
+        if self.e.mode == "thread":
+            self.e._start_group(replica_id, recover=False)
+
+    # -- Algorithm 13 -------------------------------------------------------
+    def scale_down(self, replica_id: str):
+        with self.lock:
+            e = self.e
+            disp = e.ops[self.disp_id]
+            rt = e.runtimes[self.disp_id]
+            # Step 1.a: dispatcher state update (remove route)
+            if replica_id in disp.routes:
+                disp.routes.remove(replica_id)
+                disp._sync_ports()
+            # Step 1.b: set O = undone events sent to the replica + new ids
+            O = []
+            with e.store.lock:
+                rows = [(k, r) for k, r in e.store.event_log.items()
+                        if r["rec_op"] == replica_id and r["status"] == UNDONE
+                        and k[0] == self.disp_id]
+            rows.sort(key=lambda kr: kr[0][2])
+            assignments = []
+            for k, r in rows:
+                tgt = disp.routes[disp.rr % len(disp.routes)]
+                disp.rr += 1
+                new_port = f"to_{tgt}"
+                new_id = rt.ctx.ssn.get(new_port, 0)
+                rt.ctx.ssn[new_port] = new_id + 1
+                assignments.append((k[:3], new_port, tgt, self.rp_in, new_id))
+            # Step 1.c: atomic reassignment + dispatcher state store.
+            # Mutual exclusion with the replica's generation txn: events that
+            # turned "done" in the meantime are skipped at apply time.
+            txn = e.store.begin()
+            for old_key, new_port, tgt, tport, new_id in assignments:
+                txn.ops.append(("reassign_event", old_key, replica_id,
+                                (self.disp_id, new_port, new_id), tgt, tport))
+            txn.put_state(self.disp_id, rt.new_state_id(), rt._state_blob(),
+                          keep_history=rt.keep_state_history)
+            txn.commit()
+            # Step 1.d: send events of O that are still undone
+            for old_key, new_port, tgt, tport, new_id in assignments:
+                for ins, status in e.store.event_status(
+                        (self.disp_id, new_port, new_id)):
+                    if status == UNDONE and ins is None:
+                        ev, _st = [x for x in
+                                   e.store.fetch_resend_events(self.disp_id)
+                                   if x[0].event_id == new_id
+                                   and x[0].send_port == new_port][0]
+                        rt._send(ev)
+            # Step 2: merger update
+            merger = e.ops[self.merger_id]
+            if replica_id in merger.inputs:
+                merger.inputs.remove(replica_id)
+                merger._sync_ports()
+            self._persist(merger)
+            # Step 3: update topology — delete connections + replica
+            e.pipeline.connections = [
+                c for c in e.pipeline.connections
+                if c[0] != replica_id and c[2] != replica_id]
+            e.channels = [c for c in e.channels
+                          if c.send_op != replica_id and c.rec_op != replica_id]
+            e.group_state[replica_id] = "removed"
+            e.ops.pop(replica_id, None)
+            e.pipeline.factories.pop(replica_id, None)
+            e.pipeline.groups.pop(replica_id, None)
+            e._wire(disp)
+            e._wire(merger)
+
+    def _persist(self, op: Operator):
+        rt = self.e.runtimes[op.id]
+        txn = self.e.store.begin()
+        txn.put_state(op.id, rt.new_state_id(), rt._state_blob(),
+                      keep_history=rt.keep_state_history)
+        txn.commit()

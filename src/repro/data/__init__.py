@@ -1,0 +1,2 @@
+from repro.data.pipeline import (BatchOperator, SyntheticCorpus,
+                                 TrainFeedSink, build_data_pipeline, pack_fn)

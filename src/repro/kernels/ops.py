@@ -1,0 +1,58 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (the kernel
+body executes in Python per grid step — correctness only); on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import selective_scan as _ss
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None):
+    """q,k,v: [B,S,H,D]; kv heads must be pre-expanded to H (GQA repeat)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_f", "interpret"))
+def selective_scan(a, b, *, chunk: int = 256, block_f: int = 1024,
+                   interpret: Optional[bool] = None):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t; a,b [B,S,DI,DS] f32."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ss.selective_scan(a, b, chunk=chunk, block_f=block_f,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window", "block_k",
+                                             "interpret"))
+def decode_attention(q, k, v, lengths, *, softcap: Optional[float] = None,
+                     window: Optional[int] = None, block_k: int = 1024,
+                     interpret: Optional[bool] = None):
+    """q [B,H,D]; k,v [B,S,H,D]; lengths [B] -> [B,H,D]."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _da.decode_attention(q, k, v, lengths, softcap=softcap,
+                                window=window, block_k=block_k,
+                                interpret=interpret)

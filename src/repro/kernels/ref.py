@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jax.Array:
+    """q,k,v: [B, S, H, D] (kv already expanded to H heads). -> [B, S, H, D]."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+    sc = jnp.where(mask, sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", pr, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def selective_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t over axis 1.
+
+    a, b: [B, S, DI, DS] f32 -> h: [B, S, DI, DS]."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array, *,
+                         softcap: Optional[float] = None,
+                         window: Optional[int] = None) -> jax.Array:
+    """Single-query attention over a long KV cache.
+
+    q: [B, H, D]; k,v: [B, S, H, D]; lengths: [B] (valid prefix per slot).
+    -> [B, H, D]."""
+    B, S, H, D = k.shape
+    sc = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+    kpos = jnp.arange(S)[None, :]
+    valid = kpos < lengths[:, None]
+    if window is not None:
+        valid &= kpos >= (lengths[:, None] - window)
+    sc = jnp.where(valid[:, None, :], sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", pr, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count on first init, and the production meshes need 512 placeholder host
+devices (single-pod 16x16 uses the first 256).
+
+Per cell this prints/records:
+  * compiled.memory_analysis()  — proves the cell fits 16 GB/chip HBM,
+  * compiled.cost_analysis()    — XLA's per-shard FLOPs/bytes (reference),
+  * loop-aware HLO analysis     — dot FLOPs / HBM bytes / collective bytes
+                                  per chip (repro.parallel.hlo_analysis),
+  * the three roofline terms against TPU v5e constants.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out results/dryrun   # full sweep
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+
+def _cell_result(arch_name: str, shape_name: str, multi_pod: bool,
+                 overrides: dict):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ALL_SHAPES, get_config
+    from repro.launch import input_specs as ispec
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.presets import preset_for
+    from repro.models import model as M
+    from repro.parallel import hlo_analysis
+    from repro.parallel import sharding as S
+    from repro.serving.decode import serve_step
+    from repro.training.optimizer import OptHParams
+    from repro.training.step import train_step
+
+    cfg = get_config(arch_name)
+    shape = ALL_SHAPES[shape_name]
+    preset = preset_for(arch_name)
+    for k, v in (overrides or {}).items():
+        if v is not None and hasattr(preset, k):
+            preset = dataclasses.replace(preset, **{k: v})
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    esplit = overrides.get("expert_split") or preset.expert_split
+    if esplit and esplit > 1 and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, expert_split=esplit))
+    if overrides.get("dp_only") or (preset.dp_only_train
+                                    and shape.kind == "train"):
+        # small models: no TP — params FSDP-sharded over ALL chips, batch
+        # data-parallel over the largest mesh-axis suffix dividing the
+        # global batch (multi-pod: 512 chips > 256 sequences, so the batch
+        # shards over (data, model)=256 while FSDP spans all 512)
+        flat = tuple(mesh.axis_names)
+        sizes_ = dict(zip(mesh.axis_names, mesh.devices.shape))
+        bt = flat
+        while bt:
+            n = 1
+            for a in bt:
+                n *= sizes_[a]
+            if shape.global_batch % n == 0:
+                break
+            bt = bt[1:]
+        strat = S.ShardingStrategy(fsdp=True, tp=False, ep=False,
+                                   seq_shard_decode=False,
+                                   fsdp_axes=flat, dp_axes=bt or ("data",))
+    else:
+        strat = S.ShardingStrategy.for_mesh(
+            mesh, fsdp=preset.fsdp, ep=preset.ep,
+            fsdp_over_pod=overrides.get("fsdp_over_pod", False))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if strat.tp:
+        cfg = cfg.padded_for_tp(sizes[strat.tp_axis])
+    ep_active = (cfg.moe is not None and strat.ep and strat.tp
+                 and (cfg.moe.n_experts * cfg.moe.expert_split)
+                 % sizes[strat.tp_axis] == 0)
+    dp_axes = strat.dp_axes
+    if shape.kind in ("prefill", "decode"):
+        from repro.launch.input_specs import dp_total
+        if shape.global_batch % dp_total(mesh, strat) != 0:
+            dp_axes = ()     # long_500k B=1: batch unshardable
+    rt = M.Runtime(remat=preset.remat, q_chunk=preset.q_chunk,
+                   shard_activations=True, dp_axes=dp_axes, ep=ep_active,
+                   tp_axis=(strat.tp_axis if strat.tp else ""))
+    hp = OptHParams(moment_dtype=preset.moment_dtype,
+                    grad_accum_dtype=preset.grad_accum_dtype)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            st_shapes, b_shapes, st_sh, b_sh = ispec.train_specs(
+                cfg, shape, mesh, strat, preset, hp)
+            fn = functools.partial(train_step, cfg=cfg, hp=hp, rt=rt,
+                                   compress_grads=overrides.get(
+                                       "compress_grads", False))
+            # explicit out_shardings: GSPMD output propagation breaks through
+            # the int8 quant reshape path (measured: replicated outputs =>
+            # 7.6TB/chip temp on arctic); donation = in-place state update.
+            lowered = jax.jit(fn, in_shardings=(st_sh, b_sh),
+                              out_shardings=(st_sh, None),
+                              donate_argnums=(0,)).lower(
+                st_shapes, b_shapes)
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6.0 * cfg.active_param_count() * tokens
+        elif shape.kind == "prefill":
+            p_shapes, b_shapes, p_sh, b_sh = ispec.prefill_specs(
+                cfg, shape, mesh, strat)
+
+            def prefill(params, batch):
+                logits, _ = M.forward(params, batch, cfg, rt)
+                return logits
+
+            lowered = jax.jit(prefill, in_shardings=(p_sh, b_sh)).lower(
+                p_shapes, b_shapes)
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * cfg.active_param_count() * tokens
+        else:   # decode
+            (p_shapes, c_shapes, t_shapes,
+             p_sh, c_sh, t_sh) = ispec.decode_specs(cfg, shape, mesh, strat)
+            fn = functools.partial(serve_step, cfg=cfg, rt=rt)
+            lowered = jax.jit(fn, in_shardings=(
+                p_sh, c_sh, t_sh["tokens"], t_sh["pos"]),
+                out_shardings=(None, None, c_sh),
+                donate_argnums=(1,)).lower(
+                p_shapes, c_shapes, t_shapes["tokens"], t_shapes["pos"])
+            tokens = shape.global_batch     # one new token per slot
+            model_flops = 2.0 * cfg.active_param_count() * tokens
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    if overrides.get("dump_hlo"):
+        with open(overrides["dump_hlo"], "w") as f:
+            f.write(hlo_text)
+    hlo = hlo_analysis.analyze(hlo_text)
+
+    # roofline terms (per chip; hlo numbers are already per-device SPMD)
+    compute_s = hlo["dot_flops"] / PEAK_FLOPS
+    memory_s = hlo["memory_bytes"] / HBM_BW
+    collective_s = hlo["collective_bytes"] / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    total_flops = hlo["dot_flops"] * n_chips
+    result = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_hbm_bytes": mem.argument_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              - mem.alias_size_in_bytes,
+            "fits_16GB": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                          - mem.alias_size_in_bytes) < 16e9,
+        },
+        "cost_analysis": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "hlo": {k: hlo[k] for k in ("dot_flops", "memory_bytes",
+                                    "collective_bytes", "collective_count",
+                                    "collectives", "n_whiles", "trips")},
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / total_flops
+                               if total_flops else None),
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "step_time_s_lower_bound": max(compute_s, memory_s, collective_s),
+            "mfu_upper_bound": (model_flops / n_chips / PEAK_FLOPS
+                                / max(compute_s, memory_s, collective_s)
+                                if max(compute_s, memory_s,
+                                       collective_s) > 0 else None),
+        },
+        "preset": dataclasses.asdict(preset),
+        "overrides": {k: v for k, v in (overrides or {}).items()
+                      if v not in (None, False)},
+    }
+    return result
+
+
+def run_cell(arch, shape, multi_pod, out_path=None, **overrides):
+    try:
+        res = _cell_result(arch, shape, multi_pod, overrides)
+    except Exception as e:   # a failing cell is a bug — record it loudly
+        res = {"arch": arch, "shape": shape,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+    return res
+
+
+def all_cells():
+    from repro.configs import ARCHS, shapes_for
+    for name, cfg in ARCHS.items():
+        for shp in shapes_for(cfg):
+            for multi in (False, True):
+                yield name, shp.name, multi
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1800)
+    # hillclimb overrides
+    ap.add_argument("--remat", choices=["none", "block", "full"])
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false", default=None)
+    ap.add_argument("--no-ep", dest="ep", action="store_false", default=None)
+    ap.add_argument("--microbatch", type=int)
+    ap.add_argument("--moment-dtype", dest="moment_dtype",
+                    choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--grad-accum-dtype", dest="grad_accum_dtype",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--compress-grads", action="store_true", default=False)
+    ap.add_argument("--fsdp-over-pod", action="store_true", default=False)
+    ap.add_argument("--dump-hlo", dest="dump_hlo", default=None)
+    ap.add_argument("--dp-only", dest="dp_only", action="store_true",
+                    default=False)
+    ap.add_argument("--expert-split", dest="expert_split", type=int,
+                    default=None)
+    args = ap.parse_args()
+    overrides = {k: getattr(args, k) for k in
+                 ("remat", "fsdp", "ep", "microbatch", "moment_dtype",
+                  "grad_accum_dtype", "compress_grads", "fsdp_over_pod",
+                  "dump_hlo", "dp_only", "expert_split")}
+
+    if args.all:
+        outdir = args.out or "results/dryrun"
+        os.makedirs(outdir, exist_ok=True)
+        for arch, shp, multi in all_cells():
+            tag = f"{arch}__{shp}__{'2x16x16' if multi else '16x16'}"
+            path = os.path.join(outdir, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"SKIP {tag} (exists)")
+                continue
+            # subprocess per cell: isolates compile memory + device state
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shp, "--out", path]
+            if multi:
+                cmd.append("--multi-pod")
+            print(f"RUN  {tag}", flush=True)
+            try:
+                subprocess.run(cmd, timeout=args.timeout, check=False)
+            except subprocess.TimeoutExpired:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shp,
+                               "mesh": "2x16x16" if multi else "16x16",
+                               "status": "timeout"}, f)
+        return
+
+    res = run_cell(args.arch, args.shape, args.multi_pod, args.out, **overrides)
+    if res["status"] == "ok":
+        m, r = res["memory_analysis"], res["roofline"]
+        print(f"== {res['arch']} x {res['shape']} @ {res['mesh']} ==")
+        print(f"memory_analysis: args={m['argument_bytes']/1e9:.2f}GB "
+              f"temp={m['temp_bytes']/1e9:.2f}GB peak={m['peak_hbm_bytes']/1e9:.2f}GB "
+              f"fits_16GB={m['fits_16GB']}")
+        print(f"cost_analysis:   {res['cost_analysis']}")
+        print(f"hlo(loop-aware): flops/chip={res['hlo']['dot_flops']:.3e} "
+              f"bytes/chip={res['hlo']['memory_bytes']:.3e} "
+              f"coll_bytes/chip={res['hlo']['collective_bytes']:.3e}")
+        print(f"roofline: compute={r['compute_s']*1e3:.2f}ms "
+              f"memory={r['memory_s']*1e3:.2f}ms "
+              f"collective={r['collective_s']*1e3:.2f}ms "
+              f"dominant={r['dominant']} "
+              f"MFU_ub={r['mfu_upper_bound'] and round(r['mfu_upper_bound'],3)}")
+        print(f"useful_flops_ratio(6ND/HLO)="
+              f"{res['useful_flops_ratio'] and round(res['useful_flops_ratio'],3)}")
+    else:
+        print(f"FAILED {res['arch']} x {res['shape']}: {res.get('error')}")
+        print(res.get("traceback", "")[-2000:])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct stand-ins + shardings for every model input.
+
+No device allocation happens here: train state, batches, and decode caches
+are all ``jax.eval_shape`` / ``ShapeDtypeStruct`` trees, matched with
+``NamedSharding`` trees for ``jit(..., in_shardings=...)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.launch.presets import Preset
+from repro.models import model as M
+from repro.parallel import sharding as S
+from repro.training.optimizer import OptHParams
+from repro.training.step import init_train_state
+
+
+def dp_total(mesh: Mesh, strat: S.ShardingStrategy) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in strat.dp_axes:
+        n *= sizes[a]
+    return n
+
+
+def train_batch_layout(shape: ShapeSpec, mesh: Mesh,
+                       strat: S.ShardingStrategy, preset: Preset
+                       ) -> Tuple[int, int]:
+    """(accum, microbatch) with accum*microbatch == global_batch."""
+    dp = dp_total(mesh, strat)
+    mb = preset.microbatch or dp
+    mb = min(mb, shape.global_batch)
+    while shape.global_batch % mb != 0:
+        mb -= 1
+    return shape.global_batch // mb, mb
+
+
+def train_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                strat: S.ShardingStrategy, preset: Preset,
+                hp: OptHParams):
+    """Returns (state_shapes, batch_shapes, state_shardings, batch_shardings)."""
+    rules = S.make_rules(cfg, mesh, strat)
+    accum, mb = train_batch_layout(shape, mesh, strat, preset)
+    Ssq = shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((accum, mb, Ssq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((accum, mb, Ssq), jnp.int32),
+    }
+    bspec = {
+        "tokens": P(None, strat.dp_axes, None),
+        "labels": P(None, strat.dp_axes, None),
+    }
+    if cfg.enc_dec:
+        batch["frames"] = jax.ShapeDtypeStruct((accum, mb, Ssq, cfg.d_model),
+                                               jnp.bfloat16)
+        bspec["frames"] = P(None, strat.dp_axes, None, None)
+    state_shapes = jax.eval_shape(
+        functools.partial(init_train_state, cfg=cfg, hp=hp),
+        jax.random.PRNGKey(0))
+    sspec = S.state_pspecs(cfg, rules, hp.moment_dtype)
+    return (state_shapes, batch,
+            S.named(mesh, sspec), S.named(mesh, bspec))
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                  strat: S.ShardingStrategy):
+    rules = S.make_rules(cfg, mesh, strat)
+    B, Ssq = shape.global_batch, shape.seq_len
+    shardable = B % dp_total(mesh, strat) == 0
+    dp = strat.dp_axes if shardable else None
+    batch = {"tokens": jax.ShapeDtypeStruct((B, Ssq), jnp.int32)}
+    bspec = {"tokens": P(dp, None)}
+    if cfg.enc_dec:
+        batch["frames"] = jax.ShapeDtypeStruct((B, Ssq, cfg.d_model),
+                                               jnp.bfloat16)
+        bspec["frames"] = P(dp, None, None)
+    pshapes = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+    pspec = S.param_pspecs(cfg, rules)
+    return pshapes, batch, S.named(mesh, pspec), S.named(mesh, bspec)
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                 strat: S.ShardingStrategy, cross_len: int = 4096):
+    rules = S.make_rules(cfg, mesh, strat)
+    B, Ssq = shape.global_batch, shape.seq_len
+    shardable = B % dp_total(mesh, strat) == 0
+    dp = strat.dp_axes if shardable else None
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, Ssq, jnp.bfloat16, cross_len=cross_len))
+    cspec = S.cache_pspecs(cfg, rules, shardable)
+    toks = {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    tspec = {"tokens": P(dp), "pos": P(dp)}
+    pshapes = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+    pspec = S.param_pspecs(cfg, rules)
+    return (pshapes, cache_shapes, toks,
+            S.named(mesh, pspec), S.named(mesh, cspec), S.named(mesh, tspec))

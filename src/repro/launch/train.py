@@ -1,0 +1,171 @@
+"""End-to-end training driver: LOG.io-protected data pipeline + SPMD train
+step + checkable checkpoint write actions.
+
+CPU (this container): reduced configs, local 1-device mesh —
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --steps 60 --kill-worker-at 15 --kill-trainer-at 30
+TPU: pass --full; the same driver shards via the production mesh rules.
+
+Exactly-once training semantics: consumed batches are acknowledged (their
+Input Sets marked done, with the checkpoint as the covering *write action*)
+only at checkpoint boundaries, so after ANY crash the pipeline re-delivers
+exactly the batches after the last checkpoint, in order — the restarted
+trainer replays the identical trajectory (asserted by tests).
+  * --kill-worker-at N  : crash a pipeline worker group after ~N batches;
+    LOG.io recovers it non-blocking while training keeps running.
+  * --kill-trainer-at N : drop the train state at step N, restore from the
+    latest checkpoint, and crash the feed group (simulating the trainer pod
+    dying with its buffered batches).
+"""
+from __future__ import annotations
+
+import argparse
+import queue as _queue
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.configs import get_config, reduced
+from repro.core.engine import Engine, FailureInjector
+from repro.data import build_data_pipeline
+from repro.models import model as M
+from repro.training.optimizer import OptHParams
+from repro.training.step import init_train_state, make_train_step
+
+
+def run_training(*, arch: str = "internlm2-1.8b", use_reduced: bool = True,
+                 steps: int = 60, seq_len: int = 128, batch_size: int = 4,
+                 ckpt_every: int = 10, ckpt_dir: str = "/tmp/repro_ckpt",
+                 kill_worker_at: Optional[int] = None,
+                 kill_trainer_at: Optional[int] = None,
+                 lr: float = 1e-3, seed: int = 0, log_every: int = 10,
+                 d_model: int = 256, n_layers: int = 4, verbose: bool = True):
+    cfg = get_config(arch)
+    if use_reduced:
+        nl = n_layers - n_layers % len(cfg.block) or len(cfg.block)
+        cfg = reduced(cfg, d_model=d_model, n_layers=nl, vocab=2048,
+                      d_ff=4 * d_model, n_heads=4)
+    hp = OptHParams(lr=lr, warmup=20)
+    rt = M.Runtime(remat="none", q_chunk=min(seq_len, 128),
+                   shard_activations=False)
+
+    # ---- data pipeline (LOG.io-protected) --------------------------------
+    pipeline, feed_id = build_data_pipeline(
+        seq_len=seq_len, batch_size=batch_size, vocab=cfg.vocab,
+        n_shards=2 * steps + 32,
+        shard_tokens=(batch_size // 2) * (seq_len + 1),
+        per_batch=2, seed=seed)
+    plan = []
+    if kill_worker_at is not None:
+        plan.append(("pack", "post_log", 2 * kill_worker_at))
+    engine = Engine(pipeline, injector=FailureInjector(plan),
+                    mode="thread", restart_delay=0.01)
+    store = CheckpointStore(ckpt_dir)
+
+    # ---- train state (restore-or-init) -----------------------------------
+    def fresh_state():
+        return init_train_state(jax.random.PRNGKey(seed), cfg, hp,
+                                dtype=jnp.float32)
+
+    _, restored = store.latest()
+    state = (jax.tree.map(jnp.asarray, restored) if restored is not None
+             else fresh_state())
+    train_step = jax.jit(make_train_step(cfg, hp, rt))
+
+    def next_batch(deadline=30.0):
+        t_end = time.time() + deadline
+        while time.time() < t_end:
+            feed = engine.ops[feed_id]
+            feed.requeue()
+            try:
+                return feed, feed.buffer.get(timeout=0.2)
+            except _queue.Empty:
+                continue
+        raise TimeoutError("no batch from the data pipeline")
+
+    engine.start()
+    losses, crash_steps = [], []
+    pending_insets = []
+    killed_trainer = False
+    t0 = time.time()
+    while int(state["step"]) < steps:
+        feed, (inset, body) = next_batch()
+        toks = jnp.asarray(body["tokens"][:batch_size])
+        batch = {"tokens": toks[None, :, :-1],
+                 "labels": toks[None, :, 1:].astype(jnp.int32)}
+        state, metrics = train_step(state, batch)
+        step = int(state["step"])
+        losses.append(float(metrics["loss"]))
+        pending_insets.append(inset)
+
+        if step % ckpt_every == 0 or step >= steps:
+            ref = store.save(state, step)
+            feed_now = engine.ops[feed_id]
+            for ins in pending_insets:
+                feed_now.complete(ins, step, ref)
+            pending_insets = []
+
+        if verbose and (step % log_every == 0 or step >= steps):
+            print(f"step {step:4d} loss {metrics['loss']:.4f} "
+                  f"gnorm {metrics['grad_norm']:.3f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+
+        if (kill_trainer_at is not None and step >= kill_trainer_at
+                and not killed_trainer):
+            killed_trainer = True
+            crash_steps.append(step)
+            if verbose:
+                print(f"!! trainer crash at step {step}: dropping state, "
+                      f"restoring from checkpoint", flush=True)
+            old_feed = engine.ops[feed_id]
+            engine.kill_group(engine.pipeline.groups[feed_id])
+            _, restored = store.latest()
+            state = (jax.tree.map(jnp.asarray, restored)
+                     if restored is not None else fresh_state())
+            pending_insets = []
+            # wait for the feed group to be rebuilt (fresh buffer)
+            t_end = time.time() + 10
+            while engine.ops[feed_id] is old_feed and time.time() < t_end:
+                time.sleep(0.01)
+
+    engine.stop()
+    return {"losses": losses, "crash_steps": crash_steps, "engine": engine,
+            "final_state": state, "store": store,
+            "steps": int(state["step"])}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--full", dest="reduced", action="store_false",
+                    default=True)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--kill-worker-at", type=int, default=None)
+    ap.add_argument("--kill-trainer-at", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = run_training(arch=args.arch, use_reduced=args.reduced,
+                       steps=args.steps, seq_len=args.seq_len,
+                       batch_size=args.batch_size, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir,
+                       kill_worker_at=args.kill_worker_at,
+                       kill_trainer_at=args.kill_trainer_at,
+                       d_model=args.d_model, n_layers=args.n_layers,
+                       seed=args.seed)
+    print(f"finished at step {out['steps']}; "
+          f"pipeline failures={out['engine'].failures} "
+          f"restarts={out['engine'].restarts}")
+
+
+if __name__ == "__main__":
+    main()

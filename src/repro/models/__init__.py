@@ -1,0 +1,3 @@
+from repro.models.model import (Runtime, decode_step, forward, init_cache,
+                                init_params, logical_specs,
+                                cache_logical_specs)

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (ShardingStrategy, bytes_of, cache_pspecs,
+                                     logical_to_pspecs, make_rules, named,
+                                     opt_pspecs, param_pspecs, state_pspecs)

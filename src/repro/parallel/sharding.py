@@ -1,0 +1,129 @@
+"""Sharding rules: logical axes -> mesh axes, per strategy.
+
+The model annotates params/caches with *logical* axis names
+("embed", "heads", "expert", "kv_seq", ...). A ``ShardingStrategy`` maps
+those to the production mesh:
+
+  * TP   — heads / mlp / inner / vocab / expert(-internal) -> "model"
+  * FSDP — the "embed" contraction dim -> "data" (+"pod") => ZeRO-3: XLA
+           all-gathers params on use and reduce-scatters grads, overlapping
+           with the layer scan.
+  * EP   — experts -> "model" when n_experts divides the axis; otherwise
+           TP-within-expert (expert_mlp -> "model"), e.g. grok's 8 experts
+           on a 16-way axis.
+  * SP   — decode KV caches shard their sequence dim over "model".
+  * DP   — batch dims -> ("data",) or ("pod","data").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.training import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingStrategy:
+    fsdp: bool = True
+    tp: bool = True
+    ep: bool = True
+    seq_shard_decode: bool = True
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, *, fsdp: bool = True, ep: bool = True,
+                 fsdp_over_pod: bool = False,
+                 seq_shard_decode: bool = True) -> "ShardingStrategy":
+        multi = "pod" in mesh.axis_names
+        dp = ("pod", "data") if multi else ("data",)
+        fa = (("pod", "data") if (multi and fsdp_over_pod) else ("data",))
+        return ShardingStrategy(fsdp=fsdp, ep=ep, dp_axes=dp, fsdp_axes=fa,
+                                seq_shard_decode=seq_shard_decode)
+
+
+def make_rules(cfg, mesh: Mesh, strat: ShardingStrategy) -> dict:
+    model_n = dict(zip(mesh.axis_names, mesh.devices.shape))[strat.tp_axis]
+    rules = {
+        None: None,
+        "vocab": strat.tp_axis if strat.tp else None,
+        "embed": strat.fsdp_axes if strat.fsdp else None,
+        "heads": strat.tp_axis if strat.tp else None,
+        "kv_heads": None,
+        "head": None,
+        "mlp": strat.tp_axis if strat.tp else None,
+        "inner": strat.tp_axis if strat.tp else None,
+        "layers": None,
+        "batch": strat.dp_axes,
+        "kv_seq": strat.tp_axis if strat.seq_shard_decode else None,
+        "expert": None,
+        "expert_mlp": None,
+    }
+    if cfg.moe is not None and strat.tp:
+        if strat.ep and cfg.moe.n_experts % model_n == 0:
+            rules["expert"] = strat.tp_axis          # true EP
+        else:
+            rules["expert_mlp"] = strat.tp_axis      # TP-within-expert
+    return rules
+
+
+def _to_pspec(axes: Tuple, rules: dict) -> P:
+    return P(*(rules.get(a) for a in axes))
+
+
+def logical_to_pspecs(logical_tree, rules: dict):
+    return jax.tree.map(lambda ax: _to_pspec(ax, rules), logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_pspecs(cfg, rules: dict):
+    return logical_to_pspecs(M.logical_specs(cfg), rules)
+
+
+def opt_pspecs(cfg, rules: dict, moment_dtype: str):
+    """Moment trees mirror params; int8 moments are shape-preserving
+    (QTensor: q inherits the param spec; the per-row scale drops the last
+    axis), so the state tree gets QTensor-structured spec nodes."""
+    ps = param_pspecs(cfg, rules)
+    if moment_dtype != "int8":
+        return ps
+
+    def to_q(spec: P):
+        axes = tuple(spec)
+        scale_axes = axes[:-1] + (None,) if axes else (None,)
+        return quant.QTensor(spec, P(*scale_axes))
+
+    return jax.tree.map(to_q, ps, is_leaf=lambda x: isinstance(x, P))
+
+
+def state_pspecs(cfg, rules: dict, moment_dtype: str = "float32"):
+    ps = param_pspecs(cfg, rules)
+    return {
+        "params": ps,
+        "opt": {"m": opt_pspecs(cfg, rules, moment_dtype),
+                "v": opt_pspecs(cfg, rules, moment_dtype),
+                "count": P()},
+        "step": P(),
+    }
+
+
+def cache_pspecs(cfg, rules: dict, batch_shardable: bool):
+    r = dict(rules)
+    if not batch_shardable:
+        r["batch"] = None
+    return logical_to_pspecs(M.cache_logical_specs(cfg), r)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def bytes_of(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))

@@ -1,0 +1,1 @@
+from repro.serving.decode import SlotServer, make_serve_step, serve_step

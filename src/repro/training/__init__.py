@@ -1,0 +1,3 @@
+from repro.training.loss import cross_entropy, loss_fn
+from repro.training.optimizer import OptHParams, adamw_update, init_opt_state
+from repro.training.step import init_train_state, make_train_step, train_step

@@ -1,0 +1,60 @@
+"""Shared pipeline builders + expectations for the test suite."""
+from __future__ import annotations
+
+from repro.core import (CountWindowOperator, Engine, FailureInjector,
+                        GeneratorSource, LineageScope, MapOperator, Pipeline,
+                        ReadSource, SyncJoinOperator, TerminalSink)
+
+
+def linear_pipeline(n_events: int = 20, window: int = 4,
+                    sink_target: int = 5, writes: int = 0):
+    """src -> map(x2) -> win(sum of window) -> sink."""
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(n_events)])))
+        p.add(lambda: MapOperator("map", fn=lambda b: {"v": b["v"] * 2}))
+        p.add(lambda: CountWindowOperator(
+            "win", window, agg=lambda bs: {"s": sum(b["v"] for b in bs)},
+            writes_per_output=writes))
+        p.add(lambda: TerminalSink("sink", target=sink_target))
+        p.connect("src", "out", "map", "in")
+        p.connect("map", "out", "win", "in")
+        p.connect("win", "out", "sink", "in")
+        return p
+    expected = [{"s": sum(2 * j for j in range(i * window, (i + 1) * window))}
+                for i in range(sink_target)]
+    return build, expected
+
+
+def diamond_pipeline(n_events: int = 30, n1: int = 6, n2: int = 3,
+                     sink_target: int = 5):
+    """src fans out to fast/slow branches joined by a synchronized operator
+    (UC2 topology)."""
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(n_events)])))
+        p.add(lambda: MapOperator("fast", fn=lambda b: {"v": b["v"] + 1}))
+        p.add(lambda: MapOperator("slow", fn=lambda b: {"v": b["v"] * 10}))
+        p.add(lambda: SyncJoinOperator(
+            "join", n1, n2,
+            agg=lambda a, b: {"sa": sum(x["v"] for x in a),
+                              "sb": sum(x["v"] for x in b)}))
+        p.add(lambda: TerminalSink("sink", target=sink_target))
+        p.connect("src", "out", "fast", "in")
+        p.connect("src", "out", "slow", "in")
+        p.connect("fast", "out", "join", "in1")
+        p.connect("slow", "out", "join", "in2")
+        p.connect("join", "out", "sink", "in")
+        return p
+    expected = [
+        {"sa": sum(j + 1 for j in range(i * n1, (i + 1) * n1)),
+         "sb": sum(j * 10 for j in range(i * n2, (i + 1) * n2))}
+        for i in range(sink_target)]
+    return build, expected
+
+
+def sink_outputs(engine: Engine):
+    return [b for b in engine.external.committed()
+            if not (isinstance(b, dict) and "inset" in b)]

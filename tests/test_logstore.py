@@ -1,0 +1,101 @@
+"""Log store unit tests: transactional atomicity, conditional aborts
+(scale-down mutual exclusion), SQLite durability across 'process restarts'."""
+import os
+
+import pytest
+
+from repro.core import Event, MemoryLogStore, SqliteLogStore, TxnAborted
+from repro.core.events import DONE, UNDONE
+
+
+def _ev(i, inset=None):
+    return Event(i, "A", "out", "B", "in")
+
+
+def test_txn_atomicity_on_abort():
+    store = MemoryLogStore()
+    txn = store.begin()
+    txn.log_event(_ev(0), UNDONE)
+    txn.put_event_data(_ev(0))
+    txn.set_inset_status("B", "nonexistent-inset", DONE, require_rows=True)
+    with pytest.raises(TxnAborted):
+        txn.commit()
+    # nothing from the aborted txn is visible
+    assert not store.event_log
+    assert not store.event_data
+
+
+def test_assign_and_done_lifecycle():
+    store = MemoryLogStore()
+    txn = store.begin()
+    for i in range(3):
+        txn.log_event(_ev(i), UNDONE)
+        txn.put_event_data(_ev(i))
+    txn.commit()
+    txn = store.begin()
+    txn.assign_insets(("A", "out", 0), ["B:1"], rec_op="B")
+    txn.assign_insets(("A", "out", 1), ["B:1", "B:2"], rec_op="B")   # multi-assignment
+    txn.commit()
+    acked = store.fetch_ack_events("B")
+    assert [(e.event_id, ins) for e, ins, _ in acked] == \
+        [(0, "B:1"), (1, "B:1"), (1, "B:2")]
+    resend = store.fetch_resend_events("A")
+    assert [e.event_id for e, _ in resend] == [2]
+    txn = store.begin()
+    txn.set_inset_status("B", "B:1", DONE, require_rows=True)
+    txn.commit()
+    acked = store.fetch_ack_events("B")
+    assert [(e.event_id, ins) for e, ins, _ in acked] == [(1, "B:2")]
+
+
+def test_reassign_skips_done_events():
+    """Alg 13 mutual exclusion: reassignment applies only to still-undone."""
+    store = MemoryLogStore()
+    txn = store.begin()
+    txn.log_event(_ev(0), UNDONE)
+    txn.log_event(_ev(1), UNDONE)
+    txn.commit()
+    txn = store.begin()
+    txn.set_status(("A", "out", 0), DONE)
+    txn.commit()
+    txn = store.begin()
+    txn.ops.append(("reassign_event", ("A", "out", 0), "B", ("A", "to_C", 0),
+                    "C", "in"))
+    txn.ops.append(("reassign_event", ("A", "out", 1), "B", ("A", "to_C", 1),
+                    "C", "in"))
+    txn.commit()
+    # event 0 was done => untouched; event 1 moved
+    assert any(k[:3] == ("A", "out", 0) for k in store.event_log)
+    assert not any(k[:3] == ("A", "out", 1) for k in store.event_log)
+    assert any(k[:3] == ("A", "to_C", 1) for k in store.event_log)
+
+
+def test_sqlite_durability(tmp_path):
+    path = os.path.join(tmp_path, "log.db")
+    store = SqliteLogStore(path)
+    txn = store.begin()
+    for i in range(4):
+        txn.log_event(_ev(i), UNDONE)
+        txn.put_event_data(_ev(i))
+    txn.put_state("A", 1, b"state-blob")
+    txn.commit()
+    store.close()
+    # 'process restart': reopen from disk
+    store2 = SqliteLogStore(path)
+    assert len(store2.event_log) == 4
+    assert store2.get_state("A") == b"state-blob"
+    assert [e.event_id for e, _ in store2.fetch_resend_events("A")] == \
+        [0, 1, 2, 3]
+    store2.close()
+
+
+def test_sqlite_engine_end_to_end(tmp_path):
+    from repro.core import Engine, FailureInjector
+    from tests.helpers import linear_pipeline, sink_outputs
+    build, expected = linear_pipeline()
+    store = SqliteLogStore(os.path.join(tmp_path, "pipeline.db"))
+    inj = FailureInjector([("win", "post_log", 2)])
+    eng = Engine(build(), store=store, mode="step", injector=inj)
+    assert eng.run_to_completion()
+    assert sink_outputs(eng) == expected
+    store.close()

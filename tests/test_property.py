@@ -1,0 +1,107 @@
+"""Hypothesis property tests: the system's core invariants under randomized
+workloads, topologies, and failure injection.
+
+Invariants:
+  P1  exactly-once: the sink's externally committed sequence equals the
+      failure-free expectation regardless of injected failures.
+  P2  LOG.io and ABS commit the same external effects for deterministic
+      pipelines.
+  P3  captured lineage == ground-truth contributor sets.
+"""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import (CountWindowOperator, Engine, FailureInjector,
+                        GeneratorSource, LineageScope, MapOperator, Pipeline,
+                        ReadSource, TerminalSink, backward)
+from tests.helpers import sink_outputs
+
+POINTS = ["pre_filter", "pre_state_update", "post_ack_log", "pre_log",
+          "post_log", "post_send", "source_post_log"]
+
+OPS = ["src", "map", "win", "sink"]
+
+
+def _build(n_events, window, mult):
+    n_windows = n_events // window
+
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(n_events)])))
+        p.add(lambda: MapOperator("map", fn=lambda b: {"v": b["v"] * mult}))
+        p.add(lambda: CountWindowOperator(
+            "win", window, agg=lambda bs: {"s": sum(b["v"] for b in bs)}))
+        p.add(lambda: TerminalSink("sink", target=n_windows))
+        p.connect("src", "out", "map", "in")
+        p.connect("map", "out", "win", "in")
+        p.connect("win", "out", "sink", "in")
+        return p
+
+    expected = [{"s": sum(mult * j for j in range(i * window,
+                                                  (i + 1) * window))}
+                for i in range(n_windows)]
+    return build, expected
+
+
+failure_plan = st.lists(
+    st.tuples(st.sampled_from(OPS), st.sampled_from(POINTS),
+              st.integers(1, 12)),
+    min_size=0, max_size=3)
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n_windows=st.integers(2, 6), window=st.integers(1, 5),
+       mult=st.integers(1, 7), plan=failure_plan)
+def test_exactly_once_under_random_failures(n_windows, window, mult, plan):
+    build, expected = _build(n_windows * window, window, mult)
+    eng = Engine(build(), mode="step", injector=FailureInjector(plan))
+    assert eng.run_to_completion()
+    assert sink_outputs(eng) == expected
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n_windows=st.integers(2, 5), window=st.integers(1, 4),
+       mult=st.integers(1, 5), plan=failure_plan)
+def test_replay_mode_random_failures(n_windows, window, mult, plan):
+    build, expected = _build(n_windows * window, window, mult)
+    scopes = [LineageScope(("src", "out"), ("map", "out"))]
+    eng = Engine(build(), mode="step", lineage_scopes=scopes,
+                 replay_ops={"map"}, injector=FailureInjector(plan))
+    assert eng.run_to_completion()
+    assert sink_outputs(eng) == expected
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n_windows=st.integers(2, 5), window=st.integers(1, 4),
+       mult=st.integers(1, 5))
+def test_logio_equals_abs_effects(n_windows, window, mult):
+    build, expected = _build(n_windows * window, window, mult)
+    eng1 = Engine(build(), mode="step")
+    assert eng1.run_to_completion()
+    eng2 = Engine(build(), mode="thread", protocol="abs",
+                  abs_options={"epoch_events": max(2, window)})
+    eng2.start()
+    assert eng2.wait(30)
+    assert sink_outputs(eng1) == expected
+    assert sink_outputs(eng2) == expected
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n_windows=st.integers(2, 5), window=st.integers(1, 5),
+       plan=failure_plan)
+def test_lineage_matches_ground_truth(n_windows, window, plan):
+    build, expected = _build(n_windows * window, window, 2)
+    scopes = [LineageScope(("src", "out"), ("win", "out"))]
+    eng = Engine(build(), mode="step", lineage_scopes=scopes,
+                 injector=FailureInjector(plan))
+    assert eng.run_to_completion()
+    assert sink_outputs(eng) == expected
+    for i in range(n_windows):
+        back = backward(eng.store, ("win", "out", i))
+        srcs = sorted(k[2] for k in back if k[0] == "src")
+        assert srcs == list(range(i * window, (i + 1) * window)), (i, srcs)

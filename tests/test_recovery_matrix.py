@@ -1,0 +1,69 @@
+"""Crash-point matrices: exactly-once under failure at every protocol point,
+for the pessimistic (default) and replay-mode (Sec. 5) configurations, plus
+multi-operator simultaneous failures (Case 3 of the correctness proof)."""
+import pytest
+
+from repro.core import Engine, FailureInjector, LineageScope
+from tests.helpers import linear_pipeline, sink_outputs
+
+POINTS = ["source_pre_log", "source_post_log", "pre_filter",
+          "pre_state_update", "post_ack_log", "pre_log", "post_log",
+          "post_send", "pre_write", "post_write_pre_done"]
+
+
+@pytest.mark.parametrize("op_id", ["src", "map", "win", "sink"])
+@pytest.mark.parametrize("point", POINTS)
+def test_single_failure_exactly_once(op_id, point):
+    build, expected = linear_pipeline(writes=1)
+    for nth in (1, 3):
+        inj = FailureInjector([(op_id, point, nth)])
+        eng = Engine(build(), mode="step", injector=inj)
+        assert eng.run_to_completion(), (op_id, point, nth)
+        assert sink_outputs(eng) == expected, (op_id, point, nth)
+        win_writes = [b for b in eng.external.committed()
+                      if isinstance(b, dict) and "inset" in b]
+        assert len(win_writes) == 5, (op_id, point, nth)
+
+
+@pytest.mark.parametrize("plan", [
+    [("map", "post_log", 2), ("win", "pre_log", 1)],
+    [("src", "source_post_log", 5), ("win", "post_send", 2)],
+    [("map", "pre_state_update", 1), ("map", "post_ack_log", 4),
+     ("sink", "pre_write", 2)],
+    [("win", "recovery_post_resend", 1), ("win", "pre_log", 1)],  # crash DURING recovery
+])
+def test_multiple_failures(plan):
+    build, expected = linear_pipeline()
+    eng = Engine(build(), mode="step", injector=FailureInjector(plan))
+    assert eng.run_to_completion()
+    assert sink_outputs(eng) == expected
+
+
+REPLAY_POINTS = ["pre_filter", "pre_state_update", "post_ack_log", "pre_log",
+                 "post_log", "post_send"]
+
+
+@pytest.mark.parametrize("op_id", ["map", "win"])
+@pytest.mark.parametrize("point", REPLAY_POINTS)
+def test_replay_mode_exactly_once(op_id, point):
+    """map runs as a replay operator (no payload logging; lineage on all
+    ports): its own failures regenerate outputs from Input Sets; consumer
+    failures cascade a 'replay'-state restart of map (Algorithms 10-11)."""
+    build, expected = linear_pipeline()
+    scopes = [LineageScope(("src", "out"), ("map", "out"))]
+    for nth in (1, 2, 3):
+        inj = FailureInjector([(op_id, point, nth)])
+        eng = Engine(build(), mode="step", lineage_scopes=scopes,
+                     replay_ops={"map"}, injector=inj)
+        assert eng.run_to_completion(), (op_id, point, nth)
+        assert sink_outputs(eng) == expected, (op_id, point, nth)
+
+
+def test_replay_mode_logs_no_payloads():
+    build, expected = linear_pipeline()
+    scopes = [LineageScope(("src", "out"), ("map", "out"))]
+    eng = Engine(build(), mode="step", lineage_scopes=scopes,
+                 replay_ops={"map"})
+    assert eng.run_to_completion()
+    assert sink_outputs(eng) == expected
+    assert sum(1 for k in eng.store.event_data if k[0] == "map") == 0

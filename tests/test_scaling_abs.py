@@ -1,0 +1,123 @@
+"""Dynamic scaling (Algorithms 12-13) + the ABS baseline protocol."""
+import time
+
+import pytest
+
+from repro.core import (Engine, FailureInjector, GeneratorSource, MapOperator,
+                        Pipeline, ReadSource, TerminalSink)
+from repro.core.scaling import Controller, DispatcherOperator, MergerOperator
+from tests.helpers import linear_pipeline, sink_outputs
+
+
+def _replica_pipeline(n):
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(n)]), rate=0.002))
+        p.add(lambda: DispatcherOperator("disp", ["r0", "r1"]))
+        p.add(lambda: MapOperator("r0", fn=lambda b: {"v": b["v"] * 2},
+                                  processing_time=0.004))
+        p.add(lambda: MapOperator("r1", fn=lambda b: {"v": b["v"] * 2},
+                                  processing_time=0.004))
+        p.add(lambda: MergerOperator("mrg", ["r0", "r1"]))
+        p.add(lambda: TerminalSink("sink", target=n))
+        p.connect("src", "out", "disp", "in")
+        p.connect("disp", "to_r0", "r0", "in")
+        p.connect("disp", "to_r1", "r1", "in")
+        p.connect("r0", "out", "mrg", "from_r0")
+        p.connect("r1", "out", "mrg", "from_r1")
+        p.connect("mrg", "out", "sink", "in")
+        return p
+    return build
+
+
+def _controller(eng):
+    return Controller(
+        eng, "disp", "mrg",
+        replica_factory=lambda rid: (lambda: MapOperator(
+            rid, fn=lambda b: {"v": b["v"] * 2}, processing_time=0.004)))
+
+
+def test_replicas_exactly_once():
+    n = 40
+    eng = Engine(_replica_pipeline(n)(), mode="thread", restart_delay=0.01)
+    eng.start()
+    assert eng.wait(30)
+    assert sorted(b["v"] for b in eng.external.committed()) == \
+        sorted(2 * i for i in range(n))
+
+
+def test_replica_failure_nonblocking():
+    n = 40
+    inj = FailureInjector([("r0", "post_log", 3)])
+    eng = Engine(_replica_pipeline(n)(), mode="thread", injector=inj,
+                 restart_delay=0.01)
+    eng.start()
+    assert eng.wait(30)
+    assert sorted(b["v"] for b in eng.external.committed()) == \
+        sorted(2 * i for i in range(n))
+    assert eng.failures == 1
+
+
+def test_scale_up_and_down_with_failure():
+    n = 60
+    inj = FailureInjector([("r0", "post_log", 3)])
+    eng = Engine(_replica_pipeline(n)(), mode="thread", injector=inj,
+                 restart_delay=0.01)
+    ctrl = _controller(eng)
+    eng.start()
+    time.sleep(0.05)
+    ctrl.scale_up("r2")
+    time.sleep(0.08)
+    ctrl.scale_down("r1")
+    assert eng.wait(40)
+    assert sorted(b["v"] for b in eng.external.committed()) == \
+        sorted(2 * i for i in range(n))
+
+
+def test_scale_down_to_one():
+    n = 30
+    eng = Engine(_replica_pipeline(n)(), mode="thread", restart_delay=0.01)
+    ctrl = _controller(eng)
+    eng.start()
+    time.sleep(0.05)
+    ctrl.scale_down("r0")
+    assert eng.wait(30)
+    assert sorted(b["v"] for b in eng.external.committed()) == \
+        sorted(2 * i for i in range(n))
+
+
+# ---------------------------------------------------------------------------
+# ABS baseline
+# ---------------------------------------------------------------------------
+
+def test_abs_normal_processing():
+    build, expected = linear_pipeline()
+    eng = Engine(build(), mode="thread", protocol="abs",
+                 abs_options={"epoch_events": 5})
+    eng.start()
+    assert eng.wait(30)
+    assert sink_outputs(eng) == expected
+
+
+@pytest.mark.parametrize("nth", [3, 7, 12, 17])
+def test_abs_global_restart_recovery(nth):
+    build, expected = linear_pipeline()
+    inj = FailureInjector([("win", "abs_input", nth)])
+    eng = Engine(build(), mode="thread", protocol="abs", injector=inj,
+                 restart_delay=0.01, abs_options={"epoch_events": 5})
+    eng.start()
+    assert eng.wait(30)
+    assert sink_outputs(eng) == expected
+    assert eng.failures == 1
+
+
+def test_abs_two_failures():
+    build, expected = linear_pipeline()
+    inj = FailureInjector([("win", "abs_input", 5), ("map", "abs_input", 9)])
+    eng = Engine(build(), mode="thread", protocol="abs", injector=inj,
+                 restart_delay=0.01, abs_options={"epoch_events": 5})
+    eng.start()
+    assert eng.wait(40)
+    assert sink_outputs(eng) == expected
+    assert eng.failures == 2
