@@ -18,7 +18,7 @@ import numpy as np
 from repro.core import (CountWindowOperator, Engine, FailureInjector,
                         GeneratorSource, LineageScope, MapOperator, Pipeline,
                         ReadSource, SyncJoinOperator, TerminalSink)
-from repro.core.logstore import MemoryLogStore, NullLogStore
+from repro.core.logstore import MemoryLogStore, NullLogStore, build_store
 
 TIME_SCALE = 60.0
 
@@ -35,9 +35,11 @@ def run_pipeline(build: Callable[[], Pipeline], *, protocol: str = "logio",
                  plan: Sequence[Tuple[str, str, int]] = (),
                  lineage: Sequence[LineageScope] = (),
                  abs_epoch: int = 15, timeout: float = 240.0,
-                 restart_delay: float = 0.3 / TIME_SCALE * 60):
-    """Returns (wall_seconds, engine)."""
-    store = NullLogStore() if protocol == "none" else MemoryLogStore()
+                 restart_delay: float = 0.3 / TIME_SCALE * 60,
+                 store_spec: str = "memory"):
+    """Returns (wall_seconds, engine). ``store_spec`` picks the log backend
+    stack (``build_store`` spec, e.g. "memory+sharded+group")."""
+    store = NullLogStore() if protocol == "none" else build_store(store_spec)
     kwargs = dict(store=store, injector=FailureInjector(list(plan)),
                   mode="thread", restart_delay=restart_delay)
     if protocol == "abs":
@@ -74,7 +76,7 @@ def _translate(plan, protocol):
 
 def bench(name: str, build, *, protocols=("none", "logio", "abs"),
           plans=None, lineage=(), abs_epoch=15, repeats: int = 3,
-          rows: Optional[list] = None):
+          rows: Optional[list] = None, store_spec: str = "memory"):
     """Run (protocol x plan) cells; emit CSV rows
     name,us_per_call,derived where derived = overhead%% vs baseline."""
     plans = plans or {"normal": []}
@@ -88,7 +90,8 @@ def bench(name: str, build, *, protocols=("none", "logio", "abs"),
             for _ in range(repeats):
                 dt, eng = run_pipeline(build, protocol=proto,
                                        plan=_translate(plan, proto),
-                                       lineage=lineage, abs_epoch=abs_epoch)
+                                       lineage=lineage, abs_epoch=abs_epoch,
+                                       store_spec=store_spec)
                 times.append(dt)
             best = min(times)
             if proto == "none":

@@ -6,6 +6,8 @@ from repro.core.channels import Channel
 from repro.core.engine import Engine, FailureInjector, Pipeline
 from repro.core.events import Event, ReadAction
 from repro.core.lineage import LineageScope, backward, enabled_ports, forward
-from repro.core.logstore import MemoryLogStore, SqliteLogStore, TxnAborted
+from repro.core.logstore import (GroupCommitStore, LogBackend, MemoryLogStore,
+                                 NullLogStore, ShardedLogStore, SqliteLogStore,
+                                 TxnAborted, build_store)
 from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
                                  ReadSource, SimulatedCrash)

@@ -49,10 +49,18 @@ def restore_op(op: Operator, blob: bytes):
 
 
 class SnapshotStore:
-    """Durable store for epoch snapshots + per-epoch write WAL."""
+    """Durable store for epoch snapshots + per-epoch write WAL.
 
-    def __init__(self):
+    ``backend`` (optional) is a :class:`~repro.core.logstore.LogBackend`:
+    snapshots are additionally persisted through the formal log interface
+    (STATE rows keyed ``abs:<op>``), so the ABS baseline can run over the
+    exact same storage stack (sqlite / sharded / group commit) as LOG.io —
+    an epoch's WAL is only committed to the external system once the
+    backend's durability watermark covers its snapshots."""
+
+    def __init__(self, backend=None):
         self.lock = threading.Lock()
+        self.backend = backend
         self.snaps: Dict[int, Dict[str, bytes]] = {}
         self.offsets: Dict[int, Dict[str, int]] = {}
         self.wal: Dict[int, List[Tuple[str, str, int, Any]]] = {}
@@ -64,6 +72,10 @@ class SnapshotStore:
         with self.lock:
             self.snaps.setdefault(epoch, {})[op_id] = blob
             self.bytes_written += len(blob)
+        if self.backend is not None:
+            txn = self.backend.begin()
+            txn.put_state(f"abs:{op_id}", epoch, blob, keep_history=True)
+            txn.commit()
 
     def put_offset(self, epoch: int, op_id: str, off: int):
         with self.lock:
@@ -95,11 +107,11 @@ class _AbsOpState:
 
 class AbsEngineDriver:
     def __init__(self, engine, *, epoch_events: int = 15,
-                 snapshot_async: bool = True):
+                 snapshot_async: bool = True, durable_store=None):
         self.e = engine
         self.epoch_events = epoch_events
         self.snapshot_async = snapshot_async
-        self.store = SnapshotStore()
+        self.store = SnapshotStore(backend=durable_store)
         self.states: Dict[str, _AbsOpState] = {}
         self.src_emit_count: Dict[str, int] = {}
         self.src_epoch: Dict[str, int] = {}
@@ -271,9 +283,13 @@ class AbsEngineDriver:
                 self._next_commit += 1
 
     def _commit_epoch(self, epoch: int):
-        """Execute the epoch's WAL on the external system (exactly once)."""
+        """Execute the epoch's WAL on the external system (exactly once).
+        With a log backend attached, the external writes are gated on its
+        durability watermark (same rule as LOG.io's write actions)."""
         if epoch in self.store.committed_epochs:
             return
+        if self.store.backend is not None:
+            self.store.backend.flush()
         self.store.committed_epochs.add(epoch)
         for (op_id, conn, n, body) in self.store.wal.get(epoch, []):
             self.e.external.execute(op_id, conn, (epoch, n), body)

@@ -7,14 +7,22 @@ Semantics:
     transaction, then ``ack``s to remove it — an event leaves the channel
     only once acknowledged (assigned an InSet_ID). A receiver crash between
     peek and ack leaves the event in place.
+  * deferred acks (group-commit pipelining): with a batched log backend the
+    ack may only be *released* once the State-Update transaction is durable
+    (the durability-watermark rule). ``defer_ack`` marks the head event
+    processed-but-unreleased and advances the peek cursor so the receiver
+    keeps processing; ``release_ack`` later removes it FIFO. Deferred events
+    still occupy capacity (back-pressure) and still count in ``len`` (the
+    engine's idle detection waits for the flush). On a receiver restart
+    ``reset_pending`` rewinds the cursor: unreleased events are simply
+    re-delivered and the obsolete filter drops the already-recovered ones.
   * Channel contents survive operator restarts (the transport is the
     reliable piece, like the in-house TCP messaging + buffers in SAP DI).
 """
 from __future__ import annotations
 
-import collections
 import threading
-from typing import Optional
+from typing import List, Optional
 
 from repro.core.events import Event
 
@@ -29,7 +37,8 @@ class Channel:
         self.send_op, self.send_port = send_op, send_port
         self.rec_op, self.rec_port = rec_op, rec_port
         self.capacity = capacity
-        self._buf = collections.deque()
+        self._buf: List[Event] = []
+        self._pending = 0       # processed-but-unreleased events at the head
         self._cv = threading.Condition()
         self._closed = False
         self.total_put = 0
@@ -60,14 +69,40 @@ class Channel:
             return True
 
     def peek(self) -> Optional[Event]:
+        """Head of the unprocessed suffix (skips deferred-ack events)."""
         with self._cv:
-            return self._buf[0] if self._buf else None
+            return self._buf[self._pending] \
+                if len(self._buf) > self._pending else None
 
     def ack(self) -> Optional[Event]:
+        """Immediately remove the event ``peek`` returned."""
         with self._cv:
-            ev = self._buf.popleft() if self._buf else None
+            ev = self._buf.pop(self._pending) \
+                if len(self._buf) > self._pending else None
             self._cv.notify_all()
             return ev
+
+    def defer_ack(self):
+        """Mark the event ``peek`` returned as processed; it stays buffered
+        until ``release_ack`` (durability watermark reached)."""
+        with self._cv:
+            if len(self._buf) > self._pending:
+                self._pending += 1
+
+    def release_ack(self) -> Optional[Event]:
+        """Release the oldest deferred ack (FIFO)."""
+        with self._cv:
+            if self._pending == 0:
+                return None
+            self._pending -= 1
+            ev = self._buf.pop(0)
+            self._cv.notify_all()
+            return ev
+
+    def reset_pending(self):
+        """Receiver restart: unreleased events become deliverable again."""
+        with self._cv:
+            self._pending = 0
 
     def __len__(self):
         with self._cv:
@@ -78,6 +113,7 @@ class Channel:
         events) — never by LOG.io recovery."""
         with self._cv:
             self._buf.clear()
+            self._pending = 0
             self._cv.notify_all()
 
     def close(self):

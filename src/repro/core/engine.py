@@ -26,7 +26,7 @@ from repro.core.builtin import GeneratorSource
 from repro.core.channels import Channel
 from repro.core.events import Event
 from repro.core.lineage import LineageScope, enabled_ports
-from repro.core.logstore import MemoryLogStore
+from repro.core.logstore import LogBackend, MemoryLogStore, build_store
 from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
                                  SimulatedCrash)
 from repro.core.recovery import recover_operator
@@ -47,11 +47,11 @@ class FailureInjector:
 
     def __call__(self, op_id: str, point: str):
         with self.lock:
-            for key in ((op_id, point), (op_id, "*")):
-                self.counts[key] += 1 if key[1] == point else 0
-            self.counts[(op_id, point)] += 0   # ensure key
-            n_point = self.counts[(op_id, point)]
+            # two plain counters per operator: hits of this exact point, and
+            # hits of any point (what "*" plan entries count against)
+            self.counts[(op_id, point)] += 1
             self.counts[(op_id, "*")] += 1
+            n_point = self.counts[(op_id, point)]
             n_any = self.counts[(op_id, "*")]
             for i, (o, p, nth) in enumerate(self.plan):
                 if o != op_id:
@@ -94,7 +94,7 @@ class Pipeline:
 
 class Engine:
     def __init__(self, pipeline: Pipeline, *,
-                 store: Optional[MemoryLogStore] = None,
+                 store: Optional[Any] = None,
                  external: Optional[ExternalSystem] = None,
                  protocol: str = "logio",
                  lineage_scopes: Sequence[LineageScope] = (),
@@ -102,9 +102,17 @@ class Engine:
                  mode: str = "thread",
                  restart_delay: float = 0.05,
                  replay_ops: Sequence[str] = (),
-                 abs_options: Optional[dict] = None):
+                 abs_options: Optional[dict] = None,
+                 resume: bool = False):
+        """``store`` is any :class:`LogBackend` (or a ``build_store`` spec
+        string like ``"memory+sharded+group"``). ``resume=True`` starts
+        every operator in state "restarted" — warm restart of a whole
+        pipeline against a recovered store (full-process crash)."""
         self.pipeline = pipeline
-        self.store = store or MemoryLogStore()
+        self._resume = resume
+        if isinstance(store, str):
+            store = build_store(store)
+        self.store: LogBackend = store or MemoryLogStore()
         self.external = external or ExternalSystem()
         self.protocol = protocol
         self.lineage_scopes = list(lineage_scopes)
@@ -126,7 +134,7 @@ class Engine:
         self._kill_requests: set = set()
         self._restart_lock = threading.Lock()
         self._lineage_ports = enabled_ports(pipeline, self.lineage_scopes)
-        self._build(first=True)
+        self._build(first=True, restarted=resume)
 
     # ------------------------------------------------------------------
     def _build(self, first: bool, only_group: Optional[str] = None,
@@ -144,6 +152,12 @@ class Engine:
             op.state = "restarted" if restarted else "running"
             self.ops[op_id] = op
             self._wire(op)
+            if restarted:
+                # deferred acks of the dead runtime rewind: the events are
+                # still buffered and will be re-delivered (obsolete-filtered
+                # once recovery restores the context)
+                for ch in op.in_channels.values():
+                    ch.reset_pending()
             lin_in, lin_out = self._lineage_ports.get(op_id, (set(), set()))
             self.runtimes[op_id] = OperatorRuntime(
                 op, self.store,
@@ -186,7 +200,7 @@ class Engine:
             self._abs.start()
             return
         for g in set(self.pipeline.groups.values()):
-            self._start_group(g, recover=False)
+            self._start_group(g, recover=self._resume)
 
     def _start_group(self, group: str, recover: bool):
         t = threading.Thread(target=self._run_group, args=(group, recover),
@@ -210,6 +224,19 @@ class Engine:
                     op = self.ops.get(op_id)
                     if op is not None:
                         progressed |= self._step_op(op)
+                    rt = self.runtimes.get(op_id)
+                    if rt is not None:
+                        progressed |= rt.drain_durable()
+                if not progressed and self._sources_exhausted():
+                    # end of stream: force the durability watermark forward
+                    # so held acks/writes release before we conclude we're
+                    # done. Mid-stream idle gaps rely on the interval
+                    # watermark instead — forcing there would collapse
+                    # group-commit batches to single transactions.
+                    for op_id in self.group_ops(group):
+                        rt = self.runtimes.get(op_id)
+                        if rt is not None:
+                            progressed |= rt.drain_durable(force=True)
                 if not progressed:
                     if self._sources_exhausted() and self._all_idle():
                         time.sleep(0.01)
@@ -290,6 +317,8 @@ class Engine:
             return False
         if any(op.has_pending() for op in self.ops.values()):
             return False
+        if any(rt._deferred for rt in list(self.runtimes.values())):
+            return False    # effects still gated on the durability watermark
         return all(len(ch) == 0 for ch in self.channels)
 
     def wait(self, timeout: float = 60.0) -> bool:
@@ -309,6 +338,7 @@ class Engine:
 
     def stop(self):
         self._stop.set()
+        self.store.flush()
         for ch in self.channels:
             ch.close()
 
@@ -371,7 +401,22 @@ class Engine:
                         break
                 if crashed:
                     break
+
+            def drain_all(force: bool) -> bool:
+                any_released = False
+                for rt in list(self.runtimes.values()):
+                    try:
+                        any_released |= rt.drain_durable(force=force)
+                    except SimulatedCrash:
+                        on_crash(self.pipeline.groups[rt.op.id])
+                        any_released = True
+                return any_released
+
+            progressed |= drain_all(force=False)
             if not progressed:
+                # push the durability watermark before concluding idleness
+                if drain_all(force=True):
+                    continue
                 if self._sources_exhausted() and self._all_idle():
                     return True
                 return self._done.is_set()

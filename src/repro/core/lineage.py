@@ -13,7 +13,7 @@ import dataclasses
 from collections import defaultdict
 from typing import Dict, List, Sequence, Set, Tuple
 
-from repro.core.logstore import MemoryLogStore
+from repro.core.logstore import LogBackend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,7 +76,7 @@ def enabled_ports(pipeline, scopes: Sequence[LineageScope]
 # queries
 # ---------------------------------------------------------------------------
 
-def backward(store: MemoryLogStore, event_key: Tuple[str, str, int],
+def backward(store: LogBackend, event_key: Tuple[str, str, int],
              depth: int = 64) -> List[Tuple[str, str, int]]:
     """Input events (transitively) used to produce ``event_key`` =
     (send_op, send_port, event_id). Returns source-most event keys plus all
@@ -100,7 +100,7 @@ def backward(store: MemoryLogStore, event_key: Tuple[str, str, int],
     return contributors
 
 
-def forward(store: MemoryLogStore, event_key: Tuple[str, str, int],
+def forward(store: LogBackend, event_key: Tuple[str, str, int],
             rec_op: str, depth: int = 64) -> List[Tuple[str, str, int]]:
     """Output events (transitively) derived from ``event_key`` as consumed
     by ``rec_op``."""
@@ -115,11 +115,9 @@ def forward(store: MemoryLogStore, event_key: Tuple[str, str, int],
                     if ok not in seen:
                         seen.add(ok)
                         results.append(ok)
-                        # find consumers of ok
-                        for k, r in list(store.event_log.items()):
-                            if k[:3] == ok and r["rec_op"] is not None \
-                                    and r["rec_op"] != op:
-                                nxt.append((ok, r["rec_op"]))
+                        for consumer in store.consumers_of(ok):
+                            if consumer != op:
+                                nxt.append((ok, consumer))
         if not nxt:
             break
         frontier = nxt

@@ -1,0 +1,69 @@
+"""LOG.io persistent log tables (Sec. 3.2) behind atomic transactions.
+
+The log layer is a pluggable backend stack:
+
+  * :class:`LogBackend` / :class:`LogTransaction` — the formal interface
+    every protocol module programs against (``base``);
+  * :class:`MemoryLogStore`, :class:`NullLogStore` — dict-based backends
+    (``memory``);
+  * :class:`SqliteLogStore` — durable ACID backend (``sqlite``);
+  * :class:`ShardedLogStore` — partitions the tables by operator id across
+    independent shard backends (``sharded``);
+  * :class:`GroupCommitStore` — group-commit transaction pipelining with a
+    durability watermark (``batched``).
+
+``build_store`` assembles a stack from a spec string, e.g.
+``"memory"``, ``"sqlite"``, ``"memory+sharded"``, ``"sqlite+group"``,
+``"memory+sharded+group"``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.logstore.base import LogBackend, LogTransaction, TxnAborted
+from repro.core.logstore.batched import GroupCommitStore
+from repro.core.logstore.memory import MemoryLogStore, NullLogStore
+from repro.core.logstore.sharded import ShardedLogStore
+from repro.core.logstore.sqlite import SqliteLogStore
+
+__all__ = ["LogBackend", "LogTransaction", "TxnAborted", "MemoryLogStore",
+           "NullLogStore", "SqliteLogStore", "ShardedLogStore",
+           "GroupCommitStore", "build_store"]
+
+
+def build_store(spec: str = "memory", *, path: Optional[str] = None,
+                shards: int = 4, batch_size: int = 64,
+                interval: float = 0.005) -> LogBackend:
+    """Assemble a backend stack from ``"<base>[+sharded][+group]"``.
+
+    base: ``memory`` | ``sqlite`` (needs ``path``) | ``null``.
+    ``+group`` wraps each (shard) store in group commit; ``+sharded``
+    partitions by operator id. ``memory+group`` simulates durability via the
+    flushed-op history so ``crash()`` loses exactly the unflushed batch.
+    """
+    parts = spec.split("+")
+    base, mods = parts[0], set(parts[1:])
+    unknown = mods - {"sharded", "group"}
+    if unknown:
+        raise ValueError(f"unknown store modifiers {sorted(unknown)!r}")
+
+    def leaf(i: Optional[int] = None) -> LogBackend:
+        if base == "memory":
+            inner = None if "group" in mods else MemoryLogStore()
+        elif base == "null":
+            return NullLogStore()
+        elif base == "sqlite":
+            if path is None:
+                raise ValueError("sqlite store needs a path")
+            p = path if i is None else f"{path}.shard{i}"
+            inner = SqliteLogStore(p)
+        else:
+            raise ValueError(f"unknown store base {base!r}")
+        if "group" in mods:
+            return GroupCommitStore(inner, batch_size=batch_size,
+                                    interval=interval)
+        return inner
+
+    if "sharded" in mods:
+        return ShardedLogStore(shards, factory=lambda i: leaf(i))
+    return leaf()

@@ -1,0 +1,218 @@
+"""Formal LOG.io log-backend interface (Sec. 3.2).
+
+Five tables: EVENT_LOG, EVENT_DATA, READ_ACTION, STATE, EVENT_LINEAGE.
+
+A backend owns the tables and exposes
+
+  * ``begin()`` — a :class:`LogTransaction` buffering mutations; ``commit``
+    applies them atomically (validation of conditional mutations before any
+    mutation => the abort semantics the dynamic-scaling mutual exclusion of
+    Algorithm 13 needs) and returns a *durability token*;
+  * queries — the read paths of the recovery/lineage/scaling algorithms;
+  * a durability watermark — ``is_durable(token)`` says whether a commit has
+    reached the durable medium. Plain backends are durable at commit
+    (token ``None``); a :class:`~repro.core.logstore.batched.GroupCommitStore`
+    pipelines commits and advances the watermark at batch flushes. Consumers
+    that release *externally visible* effects (channel acks, external-system
+    writes) must gate them on ``is_durable`` — the durability-watermark rule.
+
+Transaction ops are plain tuples (``(kind, *args)``) so they can be routed
+between shards, buffered into batches, and persisted as a WAL verbatim.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.events import Event
+
+
+class TxnAborted(Exception):
+    """Raised at commit when a conditional mutation fails (e.g. marking a
+    non-existent InSet done — the dynamic-scaling mutual exclusion of
+    Algorithm 13)."""
+
+
+class LogTransaction:
+    """Buffered mutation set against one backend. Mutations are recorded as
+    op tuples; nothing is visible before ``commit``."""
+
+    def __init__(self, store: "LogBackend"):
+        self.store = store
+        self.ops: List[Tuple] = []
+
+    # -- mutations (buffered) ---------------------------------------------
+    def log_event(self, ev: Event, status: str,
+                  inset_id: Optional[str] = None):
+        self.ops.append(("log_event", ev, status, inset_id))
+
+    def put_event_data(self, ev: Event):
+        self.ops.append(("put_event_data", ev))
+
+    def delete_event_data(self, key):
+        self.ops.append(("delete_event_data", key))
+
+    def set_status(self, key, status: str, inset_id: Optional[str] = "*",
+                   rec_op: Optional[str] = None,
+                   only_status: Optional[str] = None):
+        """key = (send_op, send_port, event_id). rec_op filters to one
+        receiver's rows; only_status makes the flip conditional."""
+        self.ops.append(("set_status", key, status, inset_id, rec_op,
+                         only_status))
+
+    def assign_insets(self, key, inset_ids: List[str],
+                      rec_op: Optional[str] = None):
+        self.ops.append(("assign_insets", key, list(inset_ids), rec_op))
+
+    def set_inset_status(self, rec_op: str, inset_id: str, status: str,
+                         require_rows: bool = False):
+        self.ops.append(("set_inset_status", rec_op, inset_id, status,
+                         require_rows))
+
+    def clear_inset(self, rec_op: str, inset_id: str):
+        self.ops.append(("clear_inset", rec_op, inset_id))
+
+    def put_state(self, op_id: str, state_id: int, blob: bytes,
+                  keep_history: bool = False):
+        self.ops.append(("put_state", op_id, state_id, blob, keep_history))
+
+    def put_lineage(self, event_id: int, send_op: str, send_port: str,
+                    inset_id: str):
+        self.ops.append(("put_lineage", event_id, send_op, send_port,
+                         inset_id))
+
+    def put_read_action(self, op_id: str, conn_id: str, action_id: int,
+                        status: str, desc: str):
+        self.ops.append(("put_read_action", op_id, conn_id, action_id,
+                         status, desc))
+
+    def set_read_action_status(self, op_id: str, conn_id: str,
+                               action_id: int, status: str):
+        self.ops.append(("set_read_action_status", op_id, conn_id, action_id,
+                         status))
+
+    def delete_event_rows(self, key):
+        self.ops.append(("delete_event_rows", key))
+
+    def reassign_event(self, old_key, old_rec: Optional[str], new_key,
+                       tgt_op: str, tgt_port: str):
+        """Alg 13 step 1.c: move a still-undone event to a new destination
+        (+ new event id); rows already done are skipped at apply time."""
+        self.ops.append(("reassign_event", old_key, old_rec, new_key,
+                         tgt_op, tgt_port))
+
+    def commit(self):
+        """Atomically apply the buffered ops. Returns a durability token
+        (``None`` = durable now). Raises TxnAborted and applies nothing when
+        a conditional mutation fails."""
+        ops, self.ops = self.ops, []
+        return self.store._commit(ops)
+
+
+class LogBackend(abc.ABC):
+    """Abstract log backend: the contract every protocol module (operator
+    runtime, recovery, scaling, lineage, engine) programs against."""
+
+    # ---- transactions ----------------------------------------------------
+    def begin(self) -> LogTransaction:
+        return LogTransaction(self)
+
+    @abc.abstractmethod
+    def _commit(self, ops: List[Tuple]):
+        """Validate + apply one transaction's ops; return durability token."""
+
+    # ---- durability watermark -------------------------------------------
+    def is_durable(self, token) -> bool:
+        """True once the commit identified by ``token`` is durable. Plain
+        backends commit durably, so any token (incl. None) is durable."""
+        return True
+
+    def flush(self):
+        """Force everything committed so far to the durable medium."""
+
+    def maybe_flush(self):
+        """Flush if a size/time watermark has been reached (group commit)."""
+
+    def crash(self):
+        """Simulate a full-process crash: committed-but-unflushed data is
+        lost; the store image rolls back to the durable watermark."""
+
+    def close(self):
+        pass
+
+    # ---- recovery queries -----------------------------------------------
+    @abc.abstractmethod
+    def fetch_resend_events(self, op_id: str) -> List[Tuple[Event, str]]:
+        """Alg 7 step 1: undone, sender==op, InSet null, real output events."""
+
+    @abc.abstractmethod
+    def fetch_ack_events(self, op_id: str) -> List[Tuple[Event, str, str]]:
+        """Alg 9 step 2: undone, receiver==op, InSet assigned."""
+
+    @abc.abstractmethod
+    def fetch_replay_outputs(self, op_id: str) -> List[Tuple[int, str, str]]:
+        """Sender-side rows marked REPLAY by consumers (Alg 10 step 2)."""
+
+    @abc.abstractmethod
+    def undone_outputs_after(self, op_id: str, port: str, min_id: int
+                             ) -> List[int]:
+        """UNDONE outputs on a port with event_id >= min_id (Alg 10)."""
+
+    @abc.abstractmethod
+    def get_write_actions(self, op_id: str) -> List[Event]:
+        """Alg 8: undone events with null sender port for op."""
+
+    @abc.abstractmethod
+    def get_state(self, op_id: str) -> Optional[bytes]:
+        """Latest STATE blob for op."""
+
+    @abc.abstractmethod
+    def last_sent_ssn(self, op_id: str) -> Dict[str, int]:
+        """max event_id per output port (Alg 9 step 1)."""
+
+    @abc.abstractmethod
+    def last_acked(self, op_id: str) -> Dict[str, int]:
+        """max event_id per input port with an assigned InSet."""
+
+    @abc.abstractmethod
+    def event_status(self, key, rec_op: Optional[str] = None
+                     ) -> List[Tuple[Optional[str], str]]:
+        """[(inset_id, status)] of EVENT_LOG rows for one event key."""
+
+    @abc.abstractmethod
+    def get_read_action(self, op_id: str, conn_id: str):
+        """Latest read action for (op, conn): (action_id, row) or (None, None)."""
+
+    # ---- scaling queries (Alg 13) ---------------------------------------
+    @abc.abstractmethod
+    def undone_events_from(self, send_op: str, rec_op: str) -> List[Tuple]:
+        """Keys (send_op, send_port, event_id) of UNDONE rows from send_op
+        to rec_op, ordered by event_id (the set O of Alg 13 step 1.b)."""
+
+    # ---- lineage queries (Sec. 7.3) -------------------------------------
+    @abc.abstractmethod
+    def lineage_insets_of(self, event_key) -> List[str]:
+        """InSet_IDs that produced an output event (EVENT_LINEAGE)."""
+
+    @abc.abstractmethod
+    def lineage_events_of_inset(self, rec_op: str, inset_id: str
+                                ) -> List[Tuple]:
+        """Input event keys assigned to an Input Set."""
+
+    @abc.abstractmethod
+    def lineage_outputs_of_inset(self, send_op: str, inset_id: str
+                                 ) -> List[Tuple]:
+        """Output event keys produced from an Input Set."""
+
+    @abc.abstractmethod
+    def insets_of_event(self, event_key, rec_op: str) -> List[str]:
+        """InSet_IDs an input event joined at one receiver."""
+
+    @abc.abstractmethod
+    def consumers_of(self, event_key) -> List[str]:
+        """Receiver operator ids holding EVENT_LOG rows for an event."""
+
+    # ---- GC (Sec. 3.6) ---------------------------------------------------
+    @abc.abstractmethod
+    def gc(self, lineage_ops: Iterable[str] = ()):
+        """Drop payloads (and, without lineage, rows) of done events."""

@@ -1,0 +1,284 @@
+"""Sharded log store: partitions the five tables by operator id.
+
+Every row has a *home operator* — the receiver for EVENT_LOG/EVENT_DATA
+rows (write-action and read-action events fall back to the sender, which
+equals the receiver or is the only party), the owning operator for
+STATE/READ_ACTION rows, and the producing operator for EVENT_LINEAGE rows.
+Rows live in ``shard(home) = crc32(home) % n_shards``, each shard a full
+backend with its own lock, so the per-event transactions of unrelated
+operators never contend on one global lock (the storage-layer analogue of
+the paper's "parallelization reduces LOG.io overhead" claim, Sec. 9).
+
+A transaction may span shards (an Output-Set transaction touches the
+operator's own shard for STATE/InSet flips and the consumers' shards for
+the new EVENT_LOG rows). Commit acquires the involved shard locks in index
+order (deadlock-free), validates conditional ops against the union image,
+then applies each shard's slice — atomicity is preserved because all locks
+are held across validation and application. ``reassign_event`` (Alg 13) is
+decomposed into per-shard micro-ops so the delete (old replica's shard) and
+the insert (new target's shard) land in their home shards.
+
+Shards compose: ``ShardedLogStore(factory=lambda i: GroupCommitStore(...))``
+gives per-shard group commit; durability tokens become ``{shard: seq}`` maps
+and ``is_durable`` requires every involved shard to have flushed.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.logstore.base import LogBackend, TxnAborted
+from repro.core.logstore.memory import MemoryLogStore
+
+BROADCAST = None
+
+
+class ShardedLogStore(LogBackend):
+
+    def __init__(self, n_shards: int = 4,
+                 factory: Optional[Callable[[int], LogBackend]] = None):
+        factory = factory or (lambda i: MemoryLogStore())
+        self.n_shards = n_shards
+        self.shards: List[LogBackend] = [factory(i) for i in range(n_shards)]
+
+    # ---- placement -------------------------------------------------------
+    def _idx(self, op_id) -> int:
+        return zlib.crc32(str(op_id).encode()) % self.n_shards
+
+    def _shard(self, op_id) -> LogBackend:
+        return self.shards[self._idx(op_id)]
+
+    def _route(self, op) -> Optional[List[int]]:
+        """Home shard indices for one op tuple; BROADCAST when the rows it
+        touches cannot be located from the op alone (rare recovery paths)."""
+        kind = op[0]
+        if kind in ("log_event", "put_event_data"):
+            ev = op[1]
+            return [self._idx(ev.rec_op if ev.rec_op is not None
+                              else ev.send_op)]
+        if kind == "set_status":
+            _, key, _status, _inset, rec_op, _only = op
+            if rec_op is not None:
+                return [self._idx(rec_op)]
+            if key[1] is None:        # write action: receiver == sender
+                return [self._idx(key[0])]
+            return BROADCAST
+        if kind == "assign_insets":
+            rec = op[3]
+            return [self._idx(rec)] if rec is not None else BROADCAST
+        if kind in ("set_inset_status", "clear_inset"):
+            return [self._idx(op[1])]
+        if kind in ("put_state", "put_read_action", "set_read_action_status"):
+            return [self._idx(op[1])]
+        if kind == "put_lineage":
+            return [self._idx(op[2])]           # send_op
+        return BROADCAST    # delete_event_data / delete_event_rows / micro-ops
+
+    # ---- commit ----------------------------------------------------------
+    def _commit(self, ops):
+        routes = [self._route(op) for op in ops]
+        if any(r is BROADCAST for r in routes) or \
+                any(op[0] == "reassign_event" for op in ops):
+            involved = list(range(self.n_shards))
+        else:
+            involved = sorted({i for r in routes for i in r})
+        locks = [self.shards[i].shard_lock for i in involved]
+        for lk in locks:
+            lk.acquire()
+        try:
+            self._validate(ops)
+            shard_ops: Dict[int, List[Tuple]] = {i: [] for i in involved}
+            for op, route in zip(ops, routes):
+                if op[0] == "reassign_event":
+                    self._plan_reassign(op, shard_ops)
+                elif route is BROADCAST:
+                    for i in involved:
+                        # a broadcast assign (rec_op=None) must only reach
+                        # shards that hold rows for the event — applying it
+                        # to a rowless shard would fail mid-commit
+                        if op[0] == "assign_insets" and not \
+                                self.shards[i].image()._has_event_rows(
+                                    op[1], op[3]):
+                            continue
+                        shard_ops[i].append(op)
+                else:
+                    for i in route:
+                        shard_ops[i].append(op)
+            token = {}
+            for i in involved:
+                if shard_ops[i]:
+                    t = self.shards[i]._commit_routed(shard_ops[i])
+                    if t is not None:
+                        token[i] = t
+        finally:
+            for lk in reversed(locks):
+                lk.release()
+        self.maybe_flush()
+        return token or None
+
+    def _validate(self, ops):
+        """Conditional-op validation against the union image (locks held)."""
+        for op in ops:
+            if op[0] == "set_inset_status" and op[4]:
+                if not self._shard(op[1]).image()._has_inset_rows(op[1],
+                                                                  op[2]):
+                    raise TxnAborted(
+                        f"no EVENT_LOG rows for InSet {op[2]}@{op[1]}")
+            elif op[0] == "assign_insets":
+                key, rec = op[1], op[3]
+                imgs = [self._shard(rec).image()] if rec is not None \
+                    else [s.image() for s in self.shards]
+                if not any(img._has_event_rows(key, rec) for img in imgs):
+                    raise TxnAborted(f"no EVENT_LOG rows for {key}")
+
+    def _plan_reassign(self, op, shard_ops):
+        """Decompose reassign_event into home-shard micro-ops (locks held)."""
+        _, old_key, old_rec, new_key, tgt_op, tgt_port = op
+        from repro.core.events import UNDONE
+        moved = False
+        blob = None
+        blob_shard = None
+        for i, sh in enumerate(self.shards):
+            img = sh.image()
+            if any((old_rec is None or k[3] == old_rec)
+                   and img.event_log[k]["status"] == UNDONE
+                   for k in img._by_key3.get(old_key, ())):
+                moved = True
+                shard_ops[i].append(("_del_undone", old_key, old_rec))
+            if blob is None and old_key in img.event_data:
+                blob = img.event_data[old_key]
+                blob_shard = i
+        if not moved:
+            return
+        t = self._idx(tgt_op)
+        shard_ops[t].append(("_ins_row", new_key + (tgt_op, None),
+                             tgt_op, tgt_port))
+        if blob is not None:
+            shard_ops[blob_shard].append(("delete_event_data", old_key))
+            shard_ops[t].append(("_put_blob", new_key, blob))
+
+    # ---- durability ------------------------------------------------------
+    def is_durable(self, token) -> bool:
+        if token is None:
+            return True
+        return all(self.shards[i].is_durable(t) for i, t in token.items())
+
+    def flush(self):
+        """Coordinated barrier flush: all shard locks are held while every
+        shard flushes, so a multi-shard transaction (whose commit also held
+        all its shard locks) is either fully flushed or fully pending —
+        after ``crash()`` the durable images form a consistent cut and no
+        transaction is half-durable across shards."""
+        locks = [s.shard_lock for s in self.shards]
+        for lk in locks:
+            lk.acquire()
+        try:
+            for s in self.shards:
+                s.flush()
+        finally:
+            for lk in reversed(locks):
+                lk.release()
+
+    def maybe_flush(self):
+        if any(s._watermark_reached() for s in self.shards
+               if hasattr(s, "_watermark_reached")):
+            self.flush()
+
+    def crash(self):
+        for s in self.shards:
+            s.crash()
+
+    def close(self):
+        for s in self.shards:
+            s.close()
+
+    # ---- bookkeeping -----------------------------------------------------
+    @property
+    def commits(self):
+        return sum(s.commits for s in self.shards)
+
+    @property
+    def bytes_written(self):
+        return sum(s.bytes_written for s in self.shards)
+
+    # ---- queries ---------------------------------------------------------
+    # receiver-/owner-homed: answered by one shard
+    def fetch_ack_events(self, op_id):
+        return self._shard(op_id).fetch_ack_events(op_id)
+
+    def last_acked(self, op_id):
+        return self._shard(op_id).last_acked(op_id)
+
+    def get_write_actions(self, op_id):
+        return self._shard(op_id).get_write_actions(op_id)
+
+    def get_state(self, op_id):
+        return self._shard(op_id).get_state(op_id)
+
+    def get_read_action(self, op_id, conn_id):
+        return self._shard(op_id).get_read_action(op_id, conn_id)
+
+    def undone_events_from(self, send_op, rec_op):
+        return self._shard(rec_op).undone_events_from(send_op, rec_op)
+
+    def lineage_insets_of(self, event_key):
+        return self._shard(event_key[0]).lineage_insets_of(event_key)
+
+    def lineage_events_of_inset(self, rec_op, inset_id):
+        return self._shard(rec_op).lineage_events_of_inset(rec_op, inset_id)
+
+    def lineage_outputs_of_inset(self, send_op, inset_id):
+        return self._shard(send_op).lineage_outputs_of_inset(send_op,
+                                                             inset_id)
+
+    def insets_of_event(self, event_key, rec_op):
+        return self._shard(rec_op).insets_of_event(event_key, rec_op)
+
+    # sender-side: rows live in the consumers' shards — merge
+    def fetch_resend_events(self, op_id):
+        rows = []
+        for s in self.shards:
+            rows.extend(s.fetch_resend_events(op_id))
+        rows.sort(key=lambda es: es[0].event_id)
+        return rows
+
+    def fetch_replay_outputs(self, op_id):
+        rows = []
+        for s in self.shards:
+            rows.extend(s.fetch_replay_outputs(op_id))
+        return sorted(rows)
+
+    def undone_outputs_after(self, op_id, port, min_id):
+        ids = set()
+        for s in self.shards:
+            ids.update(s.undone_outputs_after(op_id, port, min_id))
+        return sorted(ids)
+
+    def last_sent_ssn(self, op_id):
+        out: Dict[str, int] = {}
+        for s in self.shards:
+            for port, last in s.last_sent_ssn(op_id).items():
+                out[port] = max(out.get(port, -1), last)
+        return out
+
+    def event_status(self, key, rec_op=None):
+        if rec_op is not None:
+            return self._shard(rec_op).event_status(key, rec_op)
+        rows = []
+        for s in self.shards:
+            rows.extend(s.event_status(key))
+        return rows
+
+    def consumers_of(self, event_key):
+        out = set()
+        for s in self.shards:
+            out.update(s.consumers_of(event_key))
+        return sorted(out)
+
+    def gc(self, lineage_ops: Iterable[str] = ()):
+        ops = list(lineage_ops)
+        # the "lineage exists => keep rows" guard is global: EVENT_LINEAGE
+        # rows live only in the producing operator's shard
+        keep_rows = any(s.image().lineage for s in self.shards)
+        for s in self.shards:
+            s.gc(ops, keep_rows=keep_rows)

@@ -20,7 +20,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 
 from repro.core.events import (COMPLETE, DONE, INCOMPLETE, REPLAY, UNDONE,
                                Event, ReadAction)
-from repro.core.logstore import MemoryLogStore, TxnAborted
+from repro.core.logstore import LogBackend, TxnAborted
 
 
 class SimulatedCrash(Exception):
@@ -183,7 +183,7 @@ class Operator:
 class OperatorRuntime:
     """Implements LOG.io normal processing for one operator instance."""
 
-    def __init__(self, op: Operator, store: MemoryLogStore, *,
+    def __init__(self, op: Operator, store: LogBackend, *,
                  lineage_in: Iterable[str] = (), lineage_out: Iterable[str] = (),
                  external: Optional[ExternalSystem] = None,
                  crash_point: Callable[[str, str], None] = lambda op, pt: None,
@@ -203,9 +203,53 @@ class OperatorRuntime:
         self.keep_state_history = keep_state_history
         self.pending_reads: List[Tuple[ReadAction, Any]] = []
         self.stats = {"events_in": 0, "events_out": 0, "txns": 0}
+        # externally visible effects (channel acks, external-system writes)
+        # awaiting the store's durability watermark (group commit); FIFO
+        self._deferred: List[Tuple[Any, Callable[[], None]]] = []
         # guards ctx mutations when an external driver (train loop) calls
         # generate() concurrently with the engine thread's handle_input()
         self.op_lock = threading.RLock()
+
+    # ---- durability-watermark rule (group-commit pipelining) --------------
+    def _after_durable(self, token, fn: Callable[[], None]):
+        """Run ``fn`` once the commit behind ``token`` is durable. Plain
+        backends are durable at commit, so this is immediate for them.
+        Effects release strictly FIFO: once one is queued behind the
+        watermark, every later effect queues behind it (external writes must
+        reach the external system in commit order)."""
+        if not self._deferred and self.store.is_durable(token):
+            fn()
+        else:
+            self._deferred.append((token, fn))
+
+    def _ack(self, ch, token):
+        """Release the channel ack for the event just logged — immediately
+        when durable, else deferred until the batch flushes."""
+        if not self._deferred and self.store.is_durable(token):
+            ch.ack()
+        else:
+            ch.defer_ack()
+            self._deferred.append((token, ch.release_ack))
+
+    def drain_durable(self, force: bool = False) -> bool:
+        """Release deferred effects whose commits became durable, in FIFO
+        order, stopping at the first still-volatile one. Called by the
+        engine between steps; ``force`` flushes the store first.
+        Returns True if anything was released."""
+        if not self._deferred:
+            return False
+        if force:
+            self.store.flush()
+        else:
+            self.store.maybe_flush()
+        released = False
+        with self.op_lock:
+            while self._deferred and \
+                    self.store.is_durable(self._deferred[0][0]):
+                _, fn = self._deferred.pop(0)
+                fn()
+                released = True
+        return released
 
     # ---- id generation (paper API: GetActionID / GetStateID / InSet ids) --
     def new_inset_id(self) -> str:
@@ -282,7 +326,7 @@ class OperatorRuntime:
         txn.assign_insets((ev.send_op, ev.send_port, ev.event_id), insets,
                           rec_op=self.op.id)
         try:
-            txn.commit()
+            token = txn.commit()
         except TxnAborted:
             # the event was reassigned away (scale-down, Alg 13): drop it
             ch.ack()
@@ -291,7 +335,9 @@ class OperatorRuntime:
         self.ctx.last_acked[port] = max(self.ctx.last_acked.get(port, -1),
                                         ev.event_id)
         self.crash_point(self.op.id, "post_ack_log")
-        ch.ack()        # event leaves the channel only now (acknowledged)
+        # event leaves the channel only once acknowledged — and the ack is
+        # released only once its transaction is durable (watermark rule)
+        self._ack(ch, token)
         self.stats["events_in"] += 1
         # Step 3: triggering
         for inset in self.op.triggers():
@@ -321,7 +367,7 @@ class OperatorRuntime:
         txn = self.store.begin()
         txn.set_status((ev.send_op, ev.send_port, ev.event_id), UNDONE,
                        rec_op=self.op.id)
-        txn.commit()
+        token = txn.commit()
         if ev.event_id > self.ctx.global_updated.get(port, -1):
             op.update_global(ev)
             self.ctx.global_updated[port] = ev.event_id
@@ -329,7 +375,7 @@ class OperatorRuntime:
         op._awaiting_replay.discard(match[0])
         self.ctx.last_acked[port] = max(self.ctx.last_acked.get(port, -1),
                                         ev.event_id)
-        ch.ack()
+        self._ack(ch, token)
         self.stats["events_in"] += 1
         for ins2 in op.triggers():
             self.generate(ins2)
@@ -392,7 +438,7 @@ class OperatorRuntime:
                     txn.put_lineage(e.event_id, op.id, e.send_port, inset_id)
                     seen.add((e.send_port, e.event_id))
         try:
-            txn.commit()
+            token = txn.commit()
         except TxnAborted:
             # InSet vanished (scaled-down reassignment, Alg 13) — drop output
             for port, _ in outputs:
@@ -400,14 +446,16 @@ class OperatorRuntime:
             return
         self.stats["txns"] += 1
         self.crash_point(op.id, "post_log")
-        # Step 5: send
+        # Step 5: send — may pipeline ahead of durability (duplicates are
+        # dropped by the receivers' obsolete filters on recovery)
         for e in out_events:
             self._send(e)
         self.stats["events_out"] += len(out_events)
         self.crash_point(op.id, "post_send")
-        # Step 6: write actions (Algorithm 5)
+        # Step 6: write actions (Algorithm 5) — externally visible, so they
+        # are released only once the logging transaction is durable
         for w in write_events:
-            self.execute_write(w)
+            self._after_durable(token, lambda w=w: self.execute_write(w))
         op.clear_inset(inset_id)
 
     def _send(self, e: Event):

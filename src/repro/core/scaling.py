@@ -19,7 +19,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core.builtin import MapOperator
 from repro.core.channels import Channel
 from repro.core.events import DONE, UNDONE, Event
-from repro.core.logstore import TxnAborted
+from repro.core.logstore import LogBackend, TxnAborted
 from repro.core.operator import Operator, OperatorRuntime
 
 
@@ -191,27 +191,23 @@ class Controller:
                 disp.routes.remove(replica_id)
                 disp._sync_ports()
             # Step 1.b: set O = undone events sent to the replica + new ids
-            O = []
-            with e.store.lock:
-                rows = [(k, r) for k, r in e.store.event_log.items()
-                        if r["rec_op"] == replica_id and r["status"] == UNDONE
-                        and k[0] == self.disp_id]
-            rows.sort(key=lambda kr: kr[0][2])
+            keys = e.store.undone_events_from(self.disp_id, replica_id)
             assignments = []
-            for k, r in rows:
+            for key in keys:
                 tgt = disp.routes[disp.rr % len(disp.routes)]
                 disp.rr += 1
                 new_port = f"to_{tgt}"
                 new_id = rt.ctx.ssn.get(new_port, 0)
                 rt.ctx.ssn[new_port] = new_id + 1
-                assignments.append((k[:3], new_port, tgt, self.rp_in, new_id))
+                assignments.append((key, new_port, tgt, self.rp_in, new_id))
             # Step 1.c: atomic reassignment + dispatcher state store.
             # Mutual exclusion with the replica's generation txn: events that
             # turned "done" in the meantime are skipped at apply time.
             txn = e.store.begin()
             for old_key, new_port, tgt, tport, new_id in assignments:
-                txn.ops.append(("reassign_event", old_key, replica_id,
-                                (self.disp_id, new_port, new_id), tgt, tport))
+                txn.reassign_event(old_key, replica_id,
+                                   (self.disp_id, new_port, new_id),
+                                   tgt, tport)
             txn.put_state(self.disp_id, rt.new_state_id(), rt._state_blob(),
                           keep_history=rt.keep_state_history)
             txn.commit()

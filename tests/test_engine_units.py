@@ -1,0 +1,109 @@
+"""Engine-internal unit tests: FailureInjector nth-crash semantics and the
+channel deferred-ack cursor used by group-commit pipelining."""
+import pytest
+
+from repro.core import Channel, Event, FailureInjector
+from repro.core.operator import SimulatedCrash
+
+
+def _fire(inj, op, point):
+    try:
+        inj(op, point)
+        return False
+    except SimulatedCrash:
+        return True
+
+
+def test_injector_fires_on_nth_hit_of_exact_point():
+    inj = FailureInjector([("A", "p", 3)])
+    assert not _fire(inj, "A", "p")
+    assert not _fire(inj, "A", "q")      # other points don't advance "p"
+    assert not _fire(inj, "A", "p")
+    assert not _fire(inj, "B", "p")      # other operators don't either
+    assert _fire(inj, "A", "p")          # third hit of (A, p)
+    assert inj.fired == [("A", "p", 3)]
+    # a fired plan entry is consumed: the 4th hit is quiet
+    assert not _fire(inj, "A", "p")
+
+
+def test_injector_star_counts_any_point():
+    inj = FailureInjector([("A", "*", 3)])
+    assert not _fire(inj, "A", "x")
+    assert not _fire(inj, "A", "y")
+    assert not _fire(inj, "B", "z")      # other ops don't count
+    assert _fire(inj, "A", "z")          # 3rd crash-point hit of A overall
+    assert inj.fired == [("A", "*", 3)]
+
+
+def test_injector_exact_and_star_counters_are_independent():
+    inj = FailureInjector([("A", "p", 2), ("A", "*", 5)])
+    hits = ["q", "p", "q", "p"]          # (A,p) #2 on the 4th call
+    fired = [_fire(inj, "A", pt) for pt in hits]
+    assert fired == [False, False, False, True]
+    # the star entry keeps counting every call, including the one that fired
+    assert _fire(inj, "A", "q")          # n_any reaches 5 here
+    assert inj.counts[("A", "*")] == 5
+    assert inj.fired == [("A", "p", 2), ("A", "*", 5)]
+
+
+def _ch():
+    return Channel("A", "out", "B", "in", capacity=8)
+
+
+def _put(ch, i):
+    ch.put(Event(i, "A", "out", "B", "in", body=i))
+
+
+def test_channel_deferred_ack_fifo():
+    ch = _ch()
+    for i in range(3):
+        _put(ch, i)
+    assert ch.peek().event_id == 0
+    ch.defer_ack()                        # 0 processed, unreleased
+    assert ch.peek().event_id == 1        # processing continues past it
+    ch.defer_ack()
+    assert len(ch) == 3                   # deferred events still buffered
+    assert ch.release_ack().event_id == 0
+    assert ch.release_ack().event_id == 1
+    assert ch.release_ack() is None
+    assert len(ch) == 1
+    assert ch.peek().event_id == 2
+
+
+def test_channel_immediate_ack_skips_deferred_head():
+    ch = _ch()
+    for i in range(2):
+        _put(ch, i)
+    ch.defer_ack()                        # 0 pending release
+    assert ch.peek().event_id == 1
+    assert ch.ack().event_id == 1         # drops 1, not the deferred 0
+    assert ch.release_ack().event_id == 0
+
+
+def test_channel_reset_pending_redelivers():
+    ch = _ch()
+    for i in range(2):
+        _put(ch, i)
+    ch.defer_ack()
+    assert ch.peek().event_id == 1
+    ch.reset_pending()                    # receiver restart
+    assert ch.peek().event_id == 0        # unreleased events re-delivered
+
+
+def test_abs_snapshots_through_log_backend():
+    """The ABS baseline persists its epoch snapshots through the formal
+    LogBackend interface when one is attached (same storage stack as
+    LOG.io)."""
+    from repro.core import Engine, GroupCommitStore
+    from tests.helpers import linear_pipeline, sink_outputs
+    build, expected = linear_pipeline()
+    backend = GroupCommitStore(batch_size=4, interval=0.001)
+    eng = Engine(build(), mode="thread", protocol="abs",
+                 abs_options={"epoch_events": 5, "durable_store": backend})
+    eng.start()
+    assert eng.wait(30)
+    eng.stop()
+    assert sink_outputs(eng) == expected
+    # every operator's snapshots landed as STATE rows via the backend
+    for op in ("src", "map", "win", "sink"):
+        assert backend.get_state(f"abs:{op}") is not None

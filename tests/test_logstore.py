@@ -1,19 +1,31 @@
 """Log store unit tests: transactional atomicity, conditional aborts
-(scale-down mutual exclusion), SQLite durability across 'process restarts'."""
+(scale-down mutual exclusion), SQLite durability across 'process restarts',
+sharded routing equivalence, and group-commit crash semantics (a crash
+between flushes loses exactly the unflushed batch)."""
 import os
 
 import pytest
 
-from repro.core import Event, MemoryLogStore, SqliteLogStore, TxnAborted
+from repro.core import (Event, GroupCommitStore, MemoryLogStore,
+                        ShardedLogStore, SqliteLogStore, TxnAborted,
+                        build_store)
 from repro.core.events import DONE, UNDONE
+
+STORE_SPECS = ["memory", "memory+sharded", "memory+group",
+               "memory+sharded+group"]
+
+
+def _mk(spec):
+    return build_store(spec, shards=3, batch_size=4, interval=60.0)
 
 
 def _ev(i, inset=None):
     return Event(i, "A", "out", "B", "in")
 
 
-def test_txn_atomicity_on_abort():
-    store = MemoryLogStore()
+@pytest.mark.parametrize("spec", STORE_SPECS)
+def test_txn_atomicity_on_abort(spec):
+    store = _mk(spec)
     txn = store.begin()
     txn.log_event(_ev(0), UNDONE)
     txn.put_event_data(_ev(0))
@@ -21,12 +33,13 @@ def test_txn_atomicity_on_abort():
     with pytest.raises(TxnAborted):
         txn.commit()
     # nothing from the aborted txn is visible
-    assert not store.event_log
-    assert not store.event_data
+    assert not store.fetch_resend_events("A")
+    assert not store.event_status(("A", "out", 0))
 
 
-def test_assign_and_done_lifecycle():
-    store = MemoryLogStore()
+@pytest.mark.parametrize("spec", STORE_SPECS)
+def test_assign_and_done_lifecycle(spec):
+    store = _mk(spec)
     txn = store.begin()
     for i in range(3):
         txn.log_event(_ev(i), UNDONE)
@@ -48,9 +61,10 @@ def test_assign_and_done_lifecycle():
     assert [(e.event_id, ins) for e, ins, _ in acked] == [(1, "B:2")]
 
 
-def test_reassign_skips_done_events():
+@pytest.mark.parametrize("spec", STORE_SPECS)
+def test_reassign_skips_done_events(spec):
     """Alg 13 mutual exclusion: reassignment applies only to still-undone."""
-    store = MemoryLogStore()
+    store = _mk(spec)
     txn = store.begin()
     txn.log_event(_ev(0), UNDONE)
     txn.log_event(_ev(1), UNDONE)
@@ -59,15 +73,78 @@ def test_reassign_skips_done_events():
     txn.set_status(("A", "out", 0), DONE)
     txn.commit()
     txn = store.begin()
-    txn.ops.append(("reassign_event", ("A", "out", 0), "B", ("A", "to_C", 0),
-                    "C", "in"))
-    txn.ops.append(("reassign_event", ("A", "out", 1), "B", ("A", "to_C", 1),
-                    "C", "in"))
+    txn.reassign_event(("A", "out", 0), "B", ("A", "to_C", 0), "C", "in")
+    txn.reassign_event(("A", "out", 1), "B", ("A", "to_C", 1), "C", "in")
     txn.commit()
     # event 0 was done => untouched; event 1 moved
-    assert any(k[:3] == ("A", "out", 0) for k in store.event_log)
-    assert not any(k[:3] == ("A", "out", 1) for k in store.event_log)
-    assert any(k[:3] == ("A", "to_C", 1) for k in store.event_log)
+    assert store.event_status(("A", "out", 0)) == [(None, DONE)]
+    assert store.event_status(("A", "out", 1)) == []
+    assert store.event_status(("A", "to_C", 1)) == [(None, UNDONE)]
+    assert store.consumers_of(("A", "to_C", 1)) == ["C"]
+
+
+@pytest.mark.parametrize("spec", STORE_SPECS)
+def test_assign_insets_without_rec_op(spec):
+    """The interface default (rec_op=None) must work on every stack — a
+    sharded store may only apply the assignment where rows exist."""
+    store = _mk(spec)
+    txn = store.begin()
+    txn.log_event(_ev(0), UNDONE)
+    txn.commit()
+    txn = store.begin()
+    txn.assign_insets(("A", "out", 0), ["B:1"])
+    txn.commit()
+    acked = store.fetch_ack_events("B")
+    assert [(e.event_id, ins) for e, ins, _ in acked] == [(0, "B:1")]
+
+
+def test_group_commit_tokens_stay_lost_after_crash():
+    """A commit lost in a crash must never become 'durable' later: token
+    sequence numbers are not reused."""
+    store = GroupCommitStore(batch_size=100, interval=60.0)
+    txn = store.begin()
+    txn.log_event(_ev(0), UNDONE)
+    lost = txn.commit()
+    store.crash()                      # token `lost` gone with the batch
+    for i in range(3):
+        txn = store.begin()
+        txn.log_event(_ev(10 + i), UNDONE)
+        txn.commit()
+    store.flush()
+    assert not store.is_durable(lost)
+
+
+@pytest.mark.parametrize("spec", STORE_SPECS)
+def test_gc_keeps_rows_while_lineage_exists(spec):
+    """The "lineage exists => keep EVENT_LOG rows" guard is global: on a
+    sharded store the lineage rows live only in the producer's shard, but
+    consumer-homed rows must still be retained."""
+    store = _mk(spec)
+    txn = store.begin()
+    txn.log_event(_ev(0), UNDONE)
+    txn.commit()
+    txn = store.begin()
+    txn.assign_insets(("A", "out", 0), ["B:1"], rec_op="B")
+    txn.put_lineage(5, "A", "out", "B:1")
+    txn.set_status(("A", "out", 0), DONE)
+    txn.commit()
+    store.gc()
+    # row survives gc because lineage exists somewhere in the store
+    assert store.lineage_events_of_inset("B", "B:1") == [("A", "out", 0)]
+    # payloads of done events are still collected
+    assert store.lineage_outputs_of_inset("A", "B:1") == [("A", "out", 5)]
+
+
+def test_undone_events_from():
+    store = MemoryLogStore()
+    txn = store.begin()
+    for i in range(4):
+        txn.log_event(_ev(i), UNDONE)
+    txn.set_status(("A", "out", 1), DONE)
+    txn.commit()
+    assert store.undone_events_from("A", "B") == \
+        [("A", "out", 0), ("A", "out", 2), ("A", "out", 3)]
+    assert store.undone_events_from("A", "X") == []
 
 
 def test_sqlite_durability(tmp_path):
@@ -99,3 +176,85 @@ def test_sqlite_engine_end_to_end(tmp_path):
     assert eng.run_to_completion()
     assert sink_outputs(eng) == expected
     store.close()
+
+
+# ---------------------------------------------------------------------------
+# group commit: watermark + crash semantics
+# ---------------------------------------------------------------------------
+
+def test_group_commit_watermark_and_tokens():
+    store = GroupCommitStore(batch_size=3, interval=60.0)
+    tokens = []
+    for i in range(5):
+        txn = store.begin()
+        txn.log_event(_ev(i), UNDONE)
+        tokens.append(txn.commit())
+    # txns 1-3 flushed at the size watermark; 4-5 still pending
+    assert store.is_durable(tokens[2])
+    assert not store.is_durable(tokens[4])
+    # the speculative view serves reads for all five regardless
+    assert [e.event_id for e, _ in store.fetch_resend_events("A")] == \
+        [0, 1, 2, 3, 4]
+    store.flush()
+    assert store.is_durable(tokens[4])
+
+
+def test_group_commit_crash_loses_exactly_unflushed_batch():
+    store = GroupCommitStore(batch_size=3, interval=60.0)
+    for i in range(5):
+        txn = store.begin()
+        txn.log_event(_ev(i), UNDONE)
+        txn.put_event_data(_ev(i))
+        txn.commit()
+    store.crash()
+    # events 0-2 were flushed (batch of 3); 3-4 were the unflushed batch
+    assert [e.event_id for e, _ in store.fetch_resend_events("A")] == \
+        [0, 1, 2]
+    # post-crash commits continue from the durable watermark
+    txn = store.begin()
+    txn.log_event(_ev(7), UNDONE)
+    token = txn.commit()
+    store.flush()
+    assert store.is_durable(token)
+    assert [e.event_id for e, _ in store.fetch_resend_events("A")] == \
+        [0, 1, 2, 7]
+
+
+def test_group_commit_over_sqlite(tmp_path):
+    path = os.path.join(tmp_path, "g.db")
+    store = GroupCommitStore(SqliteLogStore(path), batch_size=2,
+                             interval=60.0)
+    for i in range(5):
+        txn = store.begin()
+        txn.log_event(_ev(i), UNDONE)
+        txn.commit()
+    # two batches of 2 flushed; event 4 pending. A crash drops it...
+    store.crash()
+    assert [e.event_id for e, _ in store.fetch_resend_events("A")] == \
+        [0, 1, 2, 3]
+    store.close()
+    # ...and the durable image survives a real process restart, including
+    # a warm reopen through the group-commit stack itself
+    store2 = GroupCommitStore(SqliteLogStore(path))
+    assert [e.event_id for e, _ in store2.fetch_resend_events("A")] == \
+        [0, 1, 2, 3]
+    store2.close()
+
+
+def test_sharded_group_crash_per_shard_watermark():
+    store = build_store("memory+sharded+group", shards=3, batch_size=2,
+                        interval=60.0)
+    # rows homed by receiver: B and C may land in different shards
+    txn = store.begin()
+    txn.log_event(Event(0, "A", "out", "B", "in"), UNDONE)
+    txn.commit()
+    token = store.begin()
+    token.log_event(Event(1, "A", "out", "C", "in"), UNDONE)
+    tok = token.commit()
+    store.flush()
+    assert store.is_durable(tok)
+    txn = store.begin()
+    txn.log_event(Event(2, "A", "out", "B", "in"), UNDONE)
+    txn.commit()
+    store.crash()       # event 2 unflushed -> lost; 0 and 1 durable
+    assert [e.event_id for e, _ in store.fetch_resend_events("A")] == [0, 1]

@@ -8,6 +8,10 @@ Invariants:
       pipelines.
   P3  captured lineage == ground-truth contributor sets.
 """
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 

@@ -1,10 +1,30 @@
 """Crash-point matrices: exactly-once under failure at every protocol point,
 for the pessimistic (default) and replay-mode (Sec. 5) configurations, plus
-multi-operator simultaneous failures (Case 3 of the correctness proof)."""
+multi-operator simultaneous failures (Case 3 of the correctness proof).
+
+The whole matrix runs against all four log-backend configurations (plain,
+sharded, group-commit, sharded+group) — the protocol must be oblivious to
+the storage stack behind the LogBackend interface."""
 import pytest
 
 from repro.core import Engine, FailureInjector, LineageScope
+from repro.core.logstore import build_store
 from tests.helpers import linear_pipeline, sink_outputs
+
+STORE_SPECS = ["memory", "memory+sharded", "memory+group",
+               "memory+sharded+group"]
+
+
+@pytest.fixture(params=STORE_SPECS)
+def store_spec(request):
+    return request.param
+
+
+def _mk_store(spec):
+    # small batches so group-commit flush boundaries actually interleave
+    # with the injected crashes
+    return build_store(spec, shards=3, batch_size=4, interval=0.001)
+
 
 POINTS = ["source_pre_log", "source_post_log", "pre_filter",
           "pre_state_update", "post_ack_log", "pre_log", "post_log",
@@ -13,11 +33,12 @@ POINTS = ["source_pre_log", "source_post_log", "pre_filter",
 
 @pytest.mark.parametrize("op_id", ["src", "map", "win", "sink"])
 @pytest.mark.parametrize("point", POINTS)
-def test_single_failure_exactly_once(op_id, point):
+def test_single_failure_exactly_once(op_id, point, store_spec):
     build, expected = linear_pipeline(writes=1)
     for nth in (1, 3):
         inj = FailureInjector([(op_id, point, nth)])
-        eng = Engine(build(), mode="step", injector=inj)
+        eng = Engine(build(), mode="step", injector=inj,
+                     store=_mk_store(store_spec))
         assert eng.run_to_completion(), (op_id, point, nth)
         assert sink_outputs(eng) == expected, (op_id, point, nth)
         win_writes = [b for b in eng.external.committed()
@@ -32,9 +53,10 @@ def test_single_failure_exactly_once(op_id, point):
      ("sink", "pre_write", 2)],
     [("win", "recovery_post_resend", 1), ("win", "pre_log", 1)],  # crash DURING recovery
 ])
-def test_multiple_failures(plan):
+def test_multiple_failures(plan, store_spec):
     build, expected = linear_pipeline()
-    eng = Engine(build(), mode="step", injector=FailureInjector(plan))
+    eng = Engine(build(), mode="step", injector=FailureInjector(plan),
+                 store=_mk_store(store_spec))
     assert eng.run_to_completion()
     assert sink_outputs(eng) == expected
 
@@ -45,7 +67,7 @@ REPLAY_POINTS = ["pre_filter", "pre_state_update", "post_ack_log", "pre_log",
 
 @pytest.mark.parametrize("op_id", ["map", "win"])
 @pytest.mark.parametrize("point", REPLAY_POINTS)
-def test_replay_mode_exactly_once(op_id, point):
+def test_replay_mode_exactly_once(op_id, point, store_spec):
     """map runs as a replay operator (no payload logging; lineage on all
     ports): its own failures regenerate outputs from Input Sets; consumer
     failures cascade a 'replay'-state restart of map (Algorithms 10-11)."""
@@ -54,7 +76,8 @@ def test_replay_mode_exactly_once(op_id, point):
     for nth in (1, 2, 3):
         inj = FailureInjector([(op_id, point, nth)])
         eng = Engine(build(), mode="step", lineage_scopes=scopes,
-                     replay_ops={"map"}, injector=inj)
+                     replay_ops={"map"}, injector=inj,
+                     store=_mk_store(store_spec))
         assert eng.run_to_completion(), (op_id, point, nth)
         assert sink_outputs(eng) == expected, (op_id, point, nth)
 
@@ -67,3 +90,49 @@ def test_replay_mode_logs_no_payloads():
     assert eng.run_to_completion()
     assert sink_outputs(eng) == expected
     assert sum(1 for k in eng.store.event_data if k[0] == "map") == 0
+
+
+def test_full_process_crash_replays_to_committed_outputs(store_spec):
+    """Crash-equivalence: kill the WHOLE process mid-run (store loses its
+    unflushed batch via crash(), channels lost), warm-restart a new engine
+    on the recovered store + surviving external system — the committed
+    outputs must equal the unbatched straight-through run (exactly-once)."""
+    if "group" not in store_spec:
+        pytest.skip("full-process crash() only loses data with group commit")
+    build, expected = linear_pipeline(writes=1)
+    # no time-based flushing: crashes land with maximal pending batches
+    # (6/14/22 historically hit window boundaries mid-batch — they caught
+    # the cross-shard partial-durability bug the coordinated flush fixes)
+    for steps in (6, 10, 14, 22, 25, 40, 70):
+        store = build_store(store_spec, shards=3, batch_size=4,
+                            interval=60.0)
+        eng = Engine(build(), mode="step", store=store)
+        external = eng.external
+        done = eng.run_to_completion(max_steps=steps)
+        # full-process crash: unflushed batch gone, channels gone
+        store.crash()
+        eng2 = Engine(build(), mode="step", store=store, external=external,
+                      resume=True)
+        assert eng2.run_to_completion(), steps
+        assert sink_outputs(eng2) == expected, (steps, done)
+        win_writes = [b for b in external.committed()
+                      if isinstance(b, dict) and "inset" in b]
+        assert len(win_writes) == 5, steps
+
+
+def test_full_process_crash_resume_in_thread_mode(store_spec):
+    """The warm-restart path must also recover when the resumed engine runs
+    in thread mode (start() drives recovery, not run_to_completion)."""
+    if "group" not in store_spec:
+        pytest.skip("full-process crash() only loses data with group commit")
+    build, expected = linear_pipeline(writes=1)
+    store = build_store(store_spec, shards=3, batch_size=4, interval=60.0)
+    eng = Engine(build(), mode="step", store=store)
+    eng.run_to_completion(max_steps=14)
+    store.crash()
+    eng2 = Engine(build(), mode="thread", store=store,
+                  external=eng.external, resume=True)
+    eng2.start()
+    assert eng2.wait(30)
+    eng2.stop()
+    assert sink_outputs(eng2) == expected
