@@ -11,14 +11,10 @@ Protocols: "none" (execution baseline, NullLogStore), "logio",
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.core import (CountWindowOperator, Engine, FailureInjector,
-                        GeneratorSource, LineageScope, MapOperator, Pipeline,
-                        ReadSource, SyncJoinOperator, TerminalSink)
-from repro.core.logstore import MemoryLogStore, NullLogStore, build_store
+from repro.core import (Engine, FailureInjector, LineageScope, Pipeline)
+from repro.core.logstore import NullLogStore, build_store
 
 TIME_SCALE = 60.0
 

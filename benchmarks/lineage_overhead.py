@@ -4,7 +4,6 @@ Same UC1 pipelines run with LOG.io vs LOG.io+lineage (scope covering every
 operator); derived column = overhead of lineage relative to plain LOG.io."""
 from __future__ import annotations
 
-import time
 
 from benchmarks.common import run_pipeline
 from benchmarks.uc1 import build_uc1

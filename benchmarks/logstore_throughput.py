@@ -24,8 +24,7 @@ from typing import Dict, List, Tuple
 
 from benchmarks.uc1 import build_uc1
 from repro.core import Engine
-from repro.core.logstore import (GroupCommitStore, MemoryLogStore,
-                                 ShardedLogStore, TxnAborted, build_store)
+from repro.core.logstore import MemoryLogStore, TxnAborted, build_store
 
 
 class TraceStore(MemoryLogStore):
@@ -156,11 +155,27 @@ def main():
                     help="payload KB (UC1 fig. 6 sweeps 10KB-1MB)")
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--no-sqlite", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: fewer events, small payloads, "
+                         "single repeat")
+    ap.add_argument("--json", default=None,
+                    help="also write results as JSON (perf-trajectory "
+                         "artifact)")
     ap.add_argument("--e2e", action="store_true",
                     help="also run full UC1 engine sweeps per store config")
     args = ap.parse_args()
-    sweep(n_events=args.events, kb=args.kb, shards=args.shards,
-          sqlite=not args.no_sqlite)
+    if args.quick:
+        args.events, args.kb = min(args.events, 300), min(args.kb, 8.0)
+    results = sweep(n_events=args.events, kb=args.kb, shards=args.shards,
+                    sqlite=not args.no_sqlite,
+                    repeats=1 if args.quick else 3)
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump([{"config": name, "events_per_sec": round(eps, 1),
+                        "speedup_vs_memory_plain": round(speedup, 3)}
+                       for name, eps, speedup in results], f, indent=2)
+        print(f"# wrote {args.json}", flush=True)
     if args.e2e:
         e2e_sweep(n_events=args.events, kb=args.kb)
 

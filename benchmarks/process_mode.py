@@ -1,0 +1,142 @@
+"""Process-per-group vs thread-per-group on the UC1 straggler pipeline.
+
+Two measurements:
+
+  * **normal-processing overhead** — the UC1 pipeline (OP3 the straggler)
+    run to completion in ``mode="thread"`` and ``mode="process"``; the
+    derived column is the process-mode overhead %% vs thread mode.  The
+    price of real process isolation is the pipe transport + store RPC per
+    event; the straggler hides most of it, exactly like the paper's
+    pessimistic logging hides behind OP3 (Sec. 9.3).
+  * **recovery latency, non-blocking** — kill -9 the straggler's worker
+    mid-run and poll the supervisor's cumulative per-operator counters:
+    time from SIGKILL until OP3 processes again (warm restart + rollback
+    recovery), and how many events the source pushed *while OP3 was dead*
+    (> 0 == the paper's non-blocking property across real processes).
+
+Run:  PYTHONPATH=src:. python benchmarks/process_mode.py [--quick]
+                       [--json BENCH_process.json]
+CSV:  name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from benchmarks.uc1 import build_uc1
+from repro.core import Engine
+from repro.core.logstore import build_store
+
+
+def _mk_store(spec: str, tag: str):
+    if spec.startswith("sqlite"):
+        d = tempfile.mkdtemp(prefix=f"procbench_{tag}_")
+        return build_store(spec, path=os.path.join(d, "log.db"), shards=4,
+                           batch_size=32, interval=0.005)
+    return build_store(spec, shards=4, batch_size=32, interval=0.005)
+
+
+def _run_once(build, mode: str, spec: str, timeout: float = 300.0) -> float:
+    eng = Engine(build(), mode=mode, store=_mk_store(spec, mode))
+    t0 = time.time()
+    eng.start()
+    ok = eng.wait(timeout)
+    dt = time.time() - t0
+    eng.stop()
+    if not ok:
+        raise TimeoutError(f"UC1 did not finish in mode={mode}")
+    return dt
+
+
+def normal_overhead(rows, *, n_events: int, repeats: int,
+                    spec: str = "sqlite+sharded+group"):
+    build = build_uc1(n_events=n_events, rate_s=0.1, op2_pt=0.05,
+                      op3_pt=0.5, op3_window=2, op4_window=10, kb=4.0)
+    base = None
+    for mode in ("thread", "process"):
+        best = min(_run_once(build, mode, spec) for _ in range(repeats))
+        if mode == "thread":
+            base = best
+        over = 100.0 * (best - base) / base if base else float("nan")
+        row = (f"process_mode/normal/{mode}", best * 1e6, round(over, 1))
+        rows.append(row)
+        print(f"{row[0]},{row[1]:.0f},{row[2]}", flush=True)
+
+
+def recovery_latency(rows, *, n_events: int,
+                     spec: str = "sqlite+sharded+group",
+                     restart_delay: float = 0.25):
+    build = build_uc1(n_events=n_events, rate_s=0.1, op2_pt=0.05,
+                      op3_pt=0.5, op3_window=2, op4_window=10, kb=4.0)
+    eng = Engine(build(), mode="process", store=_mk_store(spec, "rec"),
+                 restart_delay=restart_delay)
+    eng.start()
+    # let the pipeline reach steady state, then kill the straggler's pod
+    warmup_deadline = time.time() + 120.0
+    while eng.process_stats().get("OP3", 0) < n_events // 8:
+        if time.time() > warmup_deadline:
+            eng.stop()
+            raise TimeoutError("OP3 never reached steady state")
+        time.sleep(0.01)
+    at_kill = eng.process_stats()
+    t_kill = time.time()
+    eng.kill_group("OP3")
+    # poll until OP3 processes events again (restart + rollback recovery)
+    recovered_at = None
+    src_during = 0
+    while time.time() - t_kill < 60.0:
+        stats = eng.process_stats()
+        if stats.get("OP3", 0) > at_kill.get("OP3", 0):
+            recovered_at = time.time()
+            src_during = stats.get("OP1", 0) - at_kill.get("OP1", 0)
+            break
+        time.sleep(0.005)
+    ok = eng.wait(300.0)
+    eng.stop()
+    if recovered_at is None or not ok:
+        raise TimeoutError("OP3 never recovered")
+    latency = recovered_at - t_kill
+    rows.append(("process_mode/recovery/latency", latency * 1e6,
+                 round(latency * 1e3, 1)))
+    rows.append(("process_mode/recovery/src_events_during_outage",
+                 float(src_during), src_during))
+    assert eng.failures >= 1
+    print(f"process_mode/recovery/latency,{latency * 1e6:.0f},"
+          f"{latency * 1e3:.1f}ms", flush=True)
+    print(f"process_mode/recovery/src_events_during_outage,"
+          f"{src_during},{src_during}", flush=True)
+    if src_during == 0:
+        print("# WARNING: source made no progress during the outage",
+              flush=True)
+
+
+def run(rows, repeats: int = 2, full: bool = False, quick: bool = False):
+    n = 80 if quick else (400 if full else 200)
+    normal_overhead(rows, n_events=n, repeats=1 if quick else repeats)
+    recovery_latency(rows, n_events=max(n, 160))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (seconds, not minutes)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--json", default=None,
+                    help="also write rows as JSON (perf trajectory artifact)")
+    args = ap.parse_args()
+    rows = []
+    print("name,us_per_call,derived")
+    run(rows, repeats=args.repeats, full=args.full, quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": u, "derived": d}
+                       for n, u, d in rows], f, indent=2)
+        print(f"# wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ import os
 import pickle
 import tempfile
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np

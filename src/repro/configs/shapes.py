@@ -7,7 +7,6 @@ SSM cache of ``seq_len``), NOT ``train_step``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,10 +20,9 @@ from __future__ import annotations
 import pickle
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 from repro.core.builtin import GeneratorSource, TerminalSink
-from repro.core.channels import Channel
 from repro.core.events import Event
 from repro.core.operator import Operator, SimulatedCrash
 

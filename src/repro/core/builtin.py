@@ -6,31 +6,39 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.events import COMPLETE, DONE, INCOMPLETE, UNDONE, Event
-from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
-                                 ReadSource)
+from repro.core.operator import Operator, OperatorRuntime, ReadSource
 
 
 class ScratchStore:
     """Durable scratch storage for effects of non-replayable read actions
-    (Alg 1 step 2.a). Survives operator restarts."""
+    (Alg 1 step 2.a). Survives operator restarts. ``backend`` makes the
+    medium pluggable: a process-mode worker points it at the supervisor
+    (ScratchClient) so scratch effects survive worker death too."""
     _global: Dict[Tuple, Any] = {}
     _lock = threading.Lock()
+    backend: Any = None
 
     @classmethod
     def put(cls, key, value):
+        if cls.backend is not None:
+            return cls.backend.put(key, value)
         with cls._lock:
             cls._global[key] = value
 
     @classmethod
     def get(cls, key):
+        if cls.backend is not None:
+            return cls.backend.get(key)
         with cls._lock:
             return cls._global.get(key)
 
     @classmethod
     def drop(cls, key):
+        if cls.backend is not None:
+            return cls.backend.drop(key)
         with cls._lock:
             cls._global.pop(key, None)
 

@@ -68,11 +68,29 @@ class Channel:
             self._cv.notify_all()
             return True
 
+    def force_put(self, ev: Event):
+        """Append ignoring capacity — the process-mode router's put path:
+        the authoritative buffer must absorb the event (the worker already
+        logged it as sent; dropping it would strand an UNDONE row forever).
+        Process mode trades back-pressure for availability by design."""
+        with self._cv:
+            self._buf.append(ev)
+            self.total_put += 1
+            self._cv.notify_all()
+
     def peek(self) -> Optional[Event]:
         """Head of the unprocessed suffix (skips deferred-ack events)."""
         with self._cv:
             return self._buf[self._pending] \
                 if len(self._buf) > self._pending else None
+
+    def peek_index(self, i: int) -> Optional[Event]:
+        """i-th event of the unprocessed suffix — the process-mode router's
+        delivery cursor (events stay here, the reliable buffer, until the
+        remote receiver acks)."""
+        with self._cv:
+            j = self._pending + i
+            return self._buf[j] if len(self._buf) > j else None
 
     def ack(self) -> Optional[Event]:
         """Immediately remove the event ``peek`` returned."""

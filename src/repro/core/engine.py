@@ -8,23 +8,25 @@ Two protocols share the substrate:
     snapshotting, global restart from the last complete epoch
     (see ``repro.core.abs``).
 
-Two execution modes:
-  * ``mode="thread"`` — one thread per group, real back-pressure and timing
+Three execution modes:
+  * ``mode="thread"``  — one thread per group, real back-pressure and timing
     (used by the benchmarks that reproduce Sec. 9).
-  * ``mode="step"``   — deterministic single-threaded round-robin (used by
+  * ``mode="step"``    — deterministic single-threaded round-robin (used by
     the hypothesis property tests; failures injected at exact points).
+  * ``mode="process"`` — one forked OS process per group behind a
+    pipe-based transport, all workers sharing this process's log store;
+    crash = real ``kill -9`` and only the failed group warm-restarts
+    (``repro.core.procmode``).
 """
 from __future__ import annotations
 
 import collections
-import itertools
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.builtin import GeneratorSource
 from repro.core.channels import Channel
-from repro.core.events import Event
 from repro.core.lineage import LineageScope, enabled_ports
 from repro.core.logstore import LogBackend, MemoryLogStore, build_store
 from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
@@ -132,6 +134,7 @@ class Engine:
         self.failures = 0
         self.restarts = 0
         self._kill_requests: set = set()
+        self._proc = None               # ProcessEngineDriver (mode="process")
         self._restart_lock = threading.Lock()
         self._lineage_ports = enabled_ports(pipeline, self.lineage_scopes)
         self._build(first=True, restarted=resume)
@@ -190,7 +193,11 @@ class Engine:
         self._done.set()
 
     def kill_group(self, group: str):
-        """External kill switch (node failure simulation, thread mode)."""
+        """External kill switch: SIGKILL the worker in process mode, a
+        simulated node failure in thread mode."""
+        if self._proc is not None:
+            self._proc.kill_group(group)
+            return
         self._kill_requests.add(group)
 
     def start(self):
@@ -198,6 +205,11 @@ class Engine:
             from repro.core.abs import AbsEngineDriver
             self._abs = AbsEngineDriver(self, **self.abs_options)
             self._abs.start()
+            return
+        if self.mode == "process":
+            from repro.core.procmode import ProcessEngineDriver
+            self._proc = ProcessEngineDriver(self)
+            self._proc.start()
             return
         for g in set(self.pipeline.groups.values()):
             self._start_group(g, recover=self._resume)
@@ -321,9 +333,19 @@ class Engine:
             return False    # effects still gated on the durability watermark
         return all(len(ch) == 0 for ch in self.channels)
 
+    def process_stats(self) -> Dict[str, int]:
+        """Cumulative per-operator processed-event counters (process mode:
+        aggregated across worker incarnations by the supervisor)."""
+        if self._proc is not None:
+            return self._proc.op_stats()
+        return {op_id: rt.stats["events_in"] + rt.stats["events_out"]
+                for op_id, rt in self.runtimes.items()}
+
     def wait(self, timeout: float = 60.0) -> bool:
         if self.protocol == "abs":
             return self._abs.wait(timeout)
+        if self._proc is not None:
+            return self._proc.wait(timeout)
         deadline = time.time() + timeout
         while time.time() < deadline:
             if self._done.is_set():
@@ -338,6 +360,8 @@ class Engine:
 
     def stop(self):
         self._stop.set()
+        if self._proc is not None:
+            self._proc.stop()
         self.store.flush()
         for ch in self.channels:
             ch.close()

@@ -22,13 +22,17 @@ from typing import Optional
 
 from repro.core.logstore.base import LogBackend, LogTransaction, TxnAborted
 from repro.core.logstore.batched import GroupCommitStore
+from repro.core.logstore.epoch import (EpochCoordinator,
+                                       SqliteEpochCoordinator,
+                                       make_coordinator)
 from repro.core.logstore.memory import MemoryLogStore, NullLogStore
 from repro.core.logstore.sharded import ShardedLogStore
 from repro.core.logstore.sqlite import SqliteLogStore
 
 __all__ = ["LogBackend", "LogTransaction", "TxnAborted", "MemoryLogStore",
            "NullLogStore", "SqliteLogStore", "ShardedLogStore",
-           "GroupCommitStore", "build_store"]
+           "GroupCommitStore", "EpochCoordinator", "SqliteEpochCoordinator",
+           "build_store"]
 
 
 def build_store(spec: str = "memory", *, path: Optional[str] = None,
@@ -40,12 +44,19 @@ def build_store(spec: str = "memory", *, path: Optional[str] = None,
     ``+group`` wraps each (shard) store in group commit; ``+sharded``
     partitions by operator id. ``memory+group`` simulates durability via the
     flushed-op history so ``crash()`` loses exactly the unflushed batch.
+    ``sharded+group`` stacks flush under the global-epoch 2PC protocol —
+    sqlite bases get a durable epoch coordinator at ``<path>.epochs``.
     """
     parts = spec.split("+")
     base, mods = parts[0], set(parts[1:])
     unknown = mods - {"sharded", "group"}
     if unknown:
         raise ValueError(f"unknown store modifiers {sorted(unknown)!r}")
+
+    coord = None
+    if "sharded" in mods and "group" in mods and base != "null":
+        coord = make_coordinator(
+            base, None if path is None else f"{path}.epochs")
 
     def leaf(i: Optional[int] = None) -> LogBackend:
         if base == "memory":
@@ -56,14 +67,15 @@ def build_store(spec: str = "memory", *, path: Optional[str] = None,
             if path is None:
                 raise ValueError("sqlite store needs a path")
             p = path if i is None else f"{path}.shard{i}"
-            inner = SqliteLogStore(p)
+            inner = SqliteLogStore(p, epoch_coord=coord)
         else:
             raise ValueError(f"unknown store base {base!r}")
         if "group" in mods:
             return GroupCommitStore(inner, batch_size=batch_size,
-                                    interval=interval)
+                                    interval=interval, epoch_coord=coord)
         return inner
 
     if "sharded" in mods:
-        return ShardedLogStore(shards, factory=lambda i: leaf(i))
+        return ShardedLogStore(shards, factory=lambda i: leaf(i),
+                               epoch_coord=coord)
     return leaf()

@@ -22,7 +22,7 @@ between shards, buffered into batches, and persisted as a WAL verbatim.
 from __future__ import annotations
 
 import abc
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.events import Event
 

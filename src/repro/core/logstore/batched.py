@@ -21,6 +21,13 @@ the log-store layer:
   * ``crash()`` simulates a full-process failure: the pending batch is lost
     and the view is rebuilt from the durable image — a crash between
     flushes loses exactly the unflushed batch.
+  * as a shard of an epoch-flushing :class:`ShardedLogStore`, the store
+    additionally speaks the global-flush-epoch protocol (see
+    ``logstore/epoch.py``): ``cut_pending`` snapshots the batch under an
+    epoch id, ``persist_prepared`` writes it to the durable medium tagged
+    with the epoch (prepare: durable but conditional), and ``finish_epoch``
+    advances the durability watermark once the coordinator has committed
+    the epoch. A crash rolls back prepared-but-uncommitted epochs.
 
 Without an inner backend the durable image is simulated by retaining the
 flushed op history (the moral equivalent of the SQLite WAL, in memory);
@@ -29,7 +36,7 @@ engine-level pod failures never lose the store either way.
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.logstore.base import LogBackend, TxnAborted
 from repro.core.logstore.memory import MemoryLogStore
@@ -38,10 +45,12 @@ from repro.core.logstore.memory import MemoryLogStore
 class GroupCommitStore(LogBackend):
 
     def __init__(self, inner: Optional[LogBackend] = None, *,
-                 batch_size: int = 64, interval: float = 0.005):
+                 batch_size: int = 64, interval: float = 0.005,
+                 epoch_coord=None):
         self.inner = inner
         self.batch_size = batch_size
         self.interval = interval
+        self.epoch_coord = epoch_coord
         self.view = MemoryLogStore(eager_serialize=False)
         if inner is not None:
             # warm restart over a pre-existing durable image (e.g. a SQLite
@@ -49,6 +58,8 @@ class GroupCommitStore(LogBackend):
             self.view.load_image(inner)
         self._pending: List[Tuple[int, List[Tuple]]] = []   # (token, ops)
         self._first_ts: Optional[float] = None
+        # epoch_id -> cut-but-not-yet-committed batch (2PC prepare buffer)
+        self._prepared: Dict[int, List[Tuple[int, List[Tuple]]]] = {}
         self._durable_history: List[List[Tuple]] = []   # inner=None only
         self.commit_seq = 0
         self.durable_seq = 0
@@ -112,15 +123,62 @@ class GroupCommitStore(LogBackend):
         if self._watermark_reached():
             self.flush()
 
+    # ---- global flush epochs (2PC shard side; see logstore/epoch.py) -----
+    def cut_pending(self, epoch_id: int) -> List[Tuple[int, List[Tuple]]]:
+        """Phase 1a: atomically cut the pending batch under the epoch id.
+        Called under the sharded store's exclusive epoch barrier — no
+        transaction can straddle the cut. No I/O here."""
+        with self.view.lock:
+            batch, self._pending = self._pending, []
+            self._first_ts = None
+            if batch:
+                self._prepared[epoch_id] = batch
+            return batch
+
+    def persist_prepared(self, epoch_id: int):
+        """Phase 1b (prepare): persist the cut batch tagged with the epoch.
+        Durable but conditional — it only counts if the epoch commits.
+        Runs WITHOUT any shard lock (the I/O is off the commit path)."""
+        batch = self._prepared.get(epoch_id)
+        if batch and self.inner is not None:
+            self.inner.apply_many([ops for _, ops in batch], epoch=epoch_id)
+        # inner=None: the prepare buffer itself plays the conditional
+        # durable medium; crash() consults the coordinator's verdict.
+
+    def finish_epoch(self, epoch_id: int):
+        """Phase 2: the coordinator committed the epoch — advance the
+        durability watermark past the epoch's tokens."""
+        with self.view.lock:
+            batch = self._prepared.pop(epoch_id, None)
+            if not batch:
+                return
+            if self.inner is None:
+                self._durable_history.extend(ops for _, ops in batch)
+            self.durable_seq = max(self.durable_seq, batch[-1][0])
+            self.flushes += 1
+
     def crash(self):
-        """Full-process crash: lose the unflushed batch, rebuild the view
-        from the durable image."""
+        """Full-process crash: lose the unflushed batch, roll back
+        prepared-but-uncommitted epochs, rebuild the view from the durable
+        image (prepared batches of *committed* epochs are durable — the
+        epoch-commit record is the atomicity point)."""
         with self.view.lock:
             # tokens of the lost commits must never read as durable, even
             # once later commits push the watermark past their numbers
             self._lost_tokens.update(t for t, _ in self._pending)
             self._pending = []
             self._first_ts = None
+            for eid, batch in sorted(self._prepared.items()):
+                if self.epoch_coord is not None and \
+                        self.epoch_coord.is_committed(eid):
+                    # committed before the crash: the prepared batch is
+                    # durable even though finish_epoch never ran
+                    if self.inner is None:
+                        self._durable_history.extend(ops for _, ops in batch)
+                    self.durable_seq = max(self.durable_seq, batch[-1][0])
+                else:
+                    self._lost_tokens.update(t for t, _ in batch)
+            self._prepared = {}
             fresh = MemoryLogStore(eager_serialize=False)
             if self.inner is not None:
                 self.inner.crash()

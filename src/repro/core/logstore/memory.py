@@ -22,7 +22,7 @@ import threading
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.events import DONE, REPLAY, UNDONE, Event
-from repro.core.logstore.base import LogBackend, LogTransaction, TxnAborted
+from repro.core.logstore.base import LogBackend, TxnAborted
 
 _RAW = "__raw__"
 
@@ -104,9 +104,11 @@ class MemoryLogStore(LogBackend):
         self._apply_ops(ops)
         return None
 
-    def apply_many(self, batches: List[List[Tuple]]):
+    def apply_many(self, batches: List[List[Tuple]], epoch=None):
         """Apply a batch of already-committed transactions (group-commit
-        flush / WAL replay): one lock acquisition, aborted ones skipped."""
+        flush / WAL replay): one lock acquisition, aborted ones skipped.
+        ``epoch`` (2PC prepare tag) is meaningful only for durable inners;
+        a memory inner is durable at apply."""
         with self.lock:
             for ops in batches:
                 try:

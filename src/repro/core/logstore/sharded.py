@@ -20,14 +20,23 @@ the insert (new target's shard) land in their home shards.
 
 Shards compose: ``ShardedLogStore(factory=lambda i: GroupCommitStore(...))``
 gives per-shard group commit; durability tokens become ``{shard: seq}`` maps
-and ``is_durable`` requires every involved shard to have flushed.
+and ``is_durable`` requires every involved shard to have flushed. Flushes of
+group-commit shards run the **global flush epoch protocol** (lightweight
+2PC, ``logstore/epoch.py``): a brief exclusive epoch barrier cuts every
+shard's pending batch (list swaps only), each shard then *prepares* — it
+persists its batch tagged with the epoch id, outside all shard locks — and
+a single durable epoch-commit record makes the multi-shard flush atomic.
+Prepared-but-uncommitted epochs roll back on restart, so no multi-shard
+transaction is ever half-durable and flush I/O never blocks commits.
 """
 from __future__ import annotations
 
+import threading
 import zlib
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.logstore.base import LogBackend, TxnAborted
+from repro.core.logstore.epoch import EpochCoordinator, ReadWriteLock
 from repro.core.logstore.memory import MemoryLogStore
 
 BROADCAST = None
@@ -36,10 +45,42 @@ BROADCAST = None
 class ShardedLogStore(LogBackend):
 
     def __init__(self, n_shards: int = 4,
-                 factory: Optional[Callable[[int], LogBackend]] = None):
+                 factory: Optional[Callable[[int], LogBackend]] = None,
+                 epoch_coord: Optional[EpochCoordinator] = None):
         factory = factory or (lambda i: MemoryLogStore())
         self.n_shards = n_shards
         self.shards: List[LogBackend] = [factory(i) for i in range(n_shards)]
+        self._group_shards = [s for s in self.shards
+                              if hasattr(s, "cut_pending")]
+        if self._group_shards and epoch_coord is None:
+            # durable shard media need a durable epoch-commit record: a
+            # volatile default coordinator would let prepared-but-
+            # uncommitted epochs replay as durable after a real restart —
+            # the half-durable outcome the protocol exists to prevent.
+            # build_store wires the matching coordinator automatically.
+            from repro.core.logstore.sqlite import SqliteLogStore
+            if any(isinstance(getattr(s, "inner", None), SqliteLogStore)
+                   for s in self._group_shards):
+                raise ValueError(
+                    "sharded store over durable group-commit shards needs "
+                    "a durable epoch coordinator (pass epoch_coord=, or "
+                    "assemble the stack via build_store)")
+            epoch_coord = EpochCoordinator()
+        if epoch_coord is not None:
+            # propagate so every shard (and durable inner) consults the
+            # same commit record at crash()/reopen time
+            for s in self._group_shards:
+                if getattr(s, "epoch_coord", None) is None:
+                    s.epoch_coord = epoch_coord
+                inner = getattr(s, "inner", None)
+                if inner is not None and \
+                        getattr(inner, "epoch_coord", "n/a") is None:
+                    inner.epoch_coord = epoch_coord
+        self.epoch_coord = epoch_coord
+        # commits hold the barrier shared; the epoch cut holds it exclusive
+        self._epoch_barrier = ReadWriteLock()
+        self._flush_serial = threading.Lock()   # one epoch flush at a time
+        self.epochs_flushed = 0
 
     # ---- placement -------------------------------------------------------
     def _idx(self, op_id) -> int:
@@ -76,6 +117,17 @@ class ShardedLogStore(LogBackend):
 
     # ---- commit ----------------------------------------------------------
     def _commit(self, ops):
+        # shared epoch barrier: an epoch cut cannot run mid-commit, so a
+        # multi-shard transaction lands entirely inside one flush epoch
+        self._epoch_barrier.acquire_read()
+        try:
+            token = self._commit_under_barrier(ops)
+        finally:
+            self._epoch_barrier.release_read()
+        self.maybe_flush()
+        return token
+
+    def _commit_under_barrier(self, ops):
         routes = [self._route(op) for op in ops]
         if any(r is BROADCAST for r in routes) or \
                 any(op[0] == "reassign_event" for op in ops):
@@ -113,7 +165,6 @@ class ShardedLogStore(LogBackend):
         finally:
             for lk in reversed(locks):
                 lk.release()
-        self.maybe_flush()
         return token or None
 
     def _validate(self, ops):
@@ -164,20 +215,41 @@ class ShardedLogStore(LogBackend):
         return all(self.shards[i].is_durable(t) for i, t in token.items())
 
     def flush(self):
-        """Coordinated barrier flush: all shard locks are held while every
-        shard flushes, so a multi-shard transaction (whose commit also held
-        all its shard locks) is either fully flushed or fully pending —
-        after ``crash()`` the durable images form a consistent cut and no
-        transaction is half-durable across shards."""
-        locks = [s.shard_lock for s in self.shards]
-        for lk in locks:
-            lk.acquire()
-        try:
+        """Global flush epoch (lightweight 2PC), replacing the old
+        all-shard-locks barrier:
+
+          1. under a brief exclusive epoch barrier (no I/O — commits hold
+             it shared), cut every shard's pending batch under a fresh
+             epoch id, so no transaction straddles the cut;
+          2. prepare: each shard persists its batch tagged with the epoch,
+             with NO shard lock held — commits keep flowing during the I/O;
+          3. commit point: one durable epoch-commit record marks the whole
+             multi-shard flush atomic;
+          4. each shard advances its durability watermark.
+
+        A crash anywhere in the protocol rolls back prepared-but-
+        uncommitted epochs on restart — the durable images always form a
+        consistent cut and no multi-shard transaction is half-durable."""
+        if not self._group_shards:
             for s in self.shards:
                 s.flush()
-        finally:
-            for lk in reversed(locks):
-                lk.release()
+            return
+        with self._flush_serial:
+            with self._epoch_barrier.write():
+                epoch_id = self.epoch_coord.next_epoch()
+                cut = [(s, s.cut_pending(epoch_id))
+                       for s in self._group_shards]
+            prepared = False
+            for s, batch in cut:
+                if batch:
+                    s.persist_prepared(epoch_id)
+                    prepared = True
+            if not prepared:
+                return
+            self.epoch_coord.commit_epoch(epoch_id)
+            for s, _batch in cut:
+                s.finish_epoch(epoch_id)
+            self.epochs_flushed += 1
 
     def maybe_flush(self):
         if any(s._watermark_reached() for s in self.shards
@@ -185,12 +257,19 @@ class ShardedLogStore(LogBackend):
             self.flush()
 
     def crash(self):
+        # the coordinator first: shards consult its (durable) committed
+        # set when deciding which prepared epochs survive
+        if self.epoch_coord is not None:
+            self.epoch_coord.crash()
         for s in self.shards:
             s.crash()
 
     def close(self):
+        self.flush()
         for s in self.shards:
             s.close()
+        if self.epoch_coord is not None:
+            self.epoch_coord.close()
 
     # ---- bookkeeping -----------------------------------------------------
     @property

@@ -8,12 +8,21 @@ mutation semantics but persist every commit as one SQLite transaction, and
 rebuild the in-memory image from disk on open ⇒ genuine durability with the
 exact in-memory read paths. ``apply_many`` persists a whole group-commit
 batch under a single SQLite transaction — the group-commit throughput win.
+
+Global flush epochs (see ``logstore/epoch.py``): when the store is a shard
+of an epoch-flushing stack, ``apply_many`` tags the batch's WAL rows with
+the flush epoch id. Epoch-tagged rows are 2PC *prepare* records: durable
+but conditional on the coordinator's epoch-commit record. On open (real
+restart) and on ``crash()`` (simulated one), rows of epochs that never
+committed are rolled back — deleted from the WAL — before the image is
+rebuilt, so a crash between prepare and epoch commit leaves no multi-shard
+transaction half-durable.
 """
 from __future__ import annotations
 
 import pickle
 import sqlite3
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core.logstore.base import TxnAborted
 from repro.core.logstore.memory import MemoryLogStore
@@ -21,16 +30,31 @@ from repro.core.logstore.memory import MemoryLogStore
 
 class SqliteLogStore(MemoryLogStore):
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, epoch_coord=None):
         super().__init__(eager_serialize=True)
         self.path = path
+        self.epoch_coord = epoch_coord
         self.conn = sqlite3.connect(path, check_same_thread=False)
         self.conn.execute("PRAGMA journal_mode=WAL")
         self.conn.execute(
             "CREATE TABLE IF NOT EXISTS wal_ops (seq INTEGER PRIMARY KEY "
-            "AUTOINCREMENT, blob BLOB)")
+            "AUTOINCREMENT, blob BLOB, epoch INTEGER)")
         self.conn.commit()
+        self._rollback_uncommitted_epochs()
         self._replay_from_disk()
+
+    def _rollback_uncommitted_epochs(self):
+        """Delete prepare records whose flush epoch never committed (the
+        restart half of the 2PC protocol)."""
+        if self.epoch_coord is None:
+            return
+        epochs = [e for (e,) in self.conn.execute(
+            "SELECT DISTINCT epoch FROM wal_ops WHERE epoch IS NOT NULL")
+            if not self.epoch_coord.is_committed(e)]
+        if epochs:
+            self.conn.executemany("DELETE FROM wal_ops WHERE epoch = ?",
+                                  [(e,) for e in epochs])
+            self.conn.commit()
 
     def _replay_from_disk(self):
         cur = self.conn.execute("SELECT blob FROM wal_ops ORDER BY seq")
@@ -42,11 +66,12 @@ class SqliteLogStore(MemoryLogStore):
                 continue
             self._apply_ops(ops)
 
-    def _persist(self, ops):
+    def _persist(self, ops, epoch: Optional[int] = None):
         """Apply one txn's ops and stage its WAL row; caller commits."""
         blob = pickle.dumps(ops)
         self._apply_ops(ops)
-        self.conn.execute("INSERT INTO wal_ops (blob) VALUES (?)", (blob,))
+        self.conn.execute("INSERT INTO wal_ops (blob, epoch) VALUES (?, ?)",
+                          (blob, epoch))
         self.bytes_written += len(blob)
 
     def _commit(self, ops):
@@ -61,17 +86,35 @@ class SqliteLogStore(MemoryLogStore):
         self.conn.commit()
         return None
 
-    def apply_many(self, batches: List[List[Tuple]]):
-        """One SQLite transaction for the whole batch (group commit)."""
+    def apply_many(self, batches: List[List[Tuple]],
+                   epoch: Optional[int] = None):
+        """One SQLite transaction for the whole batch (group commit). With
+        ``epoch`` this is the 2PC prepare: rows are durable but count only
+        once the epoch-commit record lands."""
         with self.lock:
             for ops in batches:
                 try:
                     self._validate(ops)
                 except TxnAborted:
                     continue
-                self._persist(ops)
+                self._persist(ops, epoch=epoch)
             self.conn.commit()                    # durable point, once
         return None
+
+    def crash(self):
+        """Simulated process crash: the durable medium (the SQLite file)
+        survives; roll back uncommitted prepare records and rebuild the
+        image from disk exactly as a real restart would."""
+        with self.lock:
+            self.conn.rollback()     # anything un-committed dies with us
+            self._rollback_uncommitted_epochs()
+            self.event_log = {}
+            self.event_data = {}
+            self.read_actions = {}
+            self.state = {}
+            self.lineage = []
+            self._reindex()
+            self._replay_from_disk()
 
     def close(self):
         self.conn.close()

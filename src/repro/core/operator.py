@@ -12,14 +12,12 @@ protocol, exposing the paper's API (Tables 7-9) via ``LogioAPI``.
 """
 from __future__ import annotations
 
-import itertools
 import pickle
 import threading
 import time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core.events import (COMPLETE, DONE, INCOMPLETE, REPLAY, UNDONE,
-                               Event, ReadAction)
+from repro.core.events import DONE, REPLAY, UNDONE, Event, ReadAction
 from repro.core.logstore import LogBackend, TxnAborted
 
 
@@ -396,8 +394,7 @@ class OperatorRuntime:
         # Step 3: assign SSNs
         out_events: List[Event] = []
         for port, body in outputs:
-            for ch in op.out_channels.get(port, []):
-                ssn = None  # one SSN per port; same event fans out per channel
+            # one SSN per port; the same event fans out per channel
             ssn = self.next_ssn(port)
             for ch in op.out_channels.get(port, []):
                 out_events.append(Event(ssn, op.id, port, ch.rec_op,

@@ -1,0 +1,833 @@
+"""Process-per-group execution mode (``Engine(mode="process")``).
+
+Each operator group runs in its own forked OS process — a real pod, not a
+thread — so crash = ``kill -9`` is a first-class scenario: a SIGKILL'd
+worker takes its volatile operator state with it and the supervisor
+warm-restarts only that group while every other worker keeps processing
+(the paper's non-blocking recovery property, across actual process
+boundaries).
+
+Topology::
+
+    parent (supervisor)                      worker (one per group)
+    ───────────────────                      ──────────────────────
+    authoritative Channels  ◄─ transport ─►  WorkerChannel replicas
+    LogBackend (the one     ◄─── RPC ─────►  StoreClient / ExternalClient /
+    sqlite-family store),                    InjectorClient / ScratchClient
+    ExternalSystem,
+    FailureInjector,
+    supervisor + router threads              single-threaded protocol loop
+
+* **Transport** — every channel's authoritative buffer lives in the
+  parent (the reliable piece, like the in-house TCP transport of the
+  paper's implementation): events survive any worker death.  The parent
+  streams a channel's unprocessed suffix to the receiving worker in FIFO
+  order; the worker's replica forwards ``ack``/``defer_ack``/
+  ``release_ack`` back, so per-port FIFO + ack + durability-watermark
+  semantics are exactly the thread-mode ones.  On a worker restart the
+  parent rewinds the deferred-ack cursor (``reset_pending``) and
+  redelivers; obsolete filters drop the already-recovered prefix.
+* **Log store** — all workers share the parent's single store through a
+  synchronous RPC proxy (:class:`StoreClient`).  Transaction ops are plain
+  tuples, so they cross the pipe verbatim; ``TxnAborted`` stays
+  synchronous.  Group-commit batching, the durability watermark and the
+  global flush-epoch 2PC all run in the parent, shared by every worker.
+* **Failure injection** — crash points RPC to the parent's injector (its
+  plan must outlive worker restarts); a firing plan entry answers
+  ``("crash",)`` and the worker SIGKILLs itself: every injected failure in
+  process mode is a genuine ``kill -9``, not an exception.
+* **Done detection** — workers report idle states (received-count,
+  sources exhausted, deferred effects, pending work); the supervisor
+  declares completion only when every worker's report is consistent with
+  its own delivery counters and every authoritative channel is empty,
+  force-draining the durability watermark at end of stream first.
+
+Workers are forked (``multiprocessing`` "fork" context), so operator
+factories need not be picklable; only :class:`~repro.core.events.Event`
+payloads and transaction op tuples cross process boundaries.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import signal
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.builtin import GeneratorSource, ScratchStore
+from repro.core.channels import Channel
+from repro.core.logstore.base import LogBackend, TxnAborted
+from repro.core.operator import OperatorRuntime, SimulatedCrash
+from repro.core.recovery import recover_operator
+
+_CTX = multiprocessing.get_context("fork")
+
+# a group is declared failed (and the run aborted) after this many total
+# restarts — a CI hygiene bound against unbounded crash loops, far above
+# any finite failure-injection plan; not a protocol constant
+MAX_RESTARTS_PER_GROUP = 50
+
+
+# ---------------------------------------------------------------------------
+# Worker-side proxies (everything here runs in the forked child)
+# ---------------------------------------------------------------------------
+
+class _Rpc:
+    """Synchronous request/response over the worker's RPC pipe. The worker
+    is single-threaded, so one outstanding request at a time by design."""
+
+    def __init__(self, conn):
+        self.conn = conn
+
+    def call(self, *msg):
+        self.conn.send(msg)
+        reply = self.conn.recv()
+        kind = reply[0]
+        if kind == "ok":
+            return reply[1]
+        if kind == "abort":
+            raise TxnAborted(reply[1])
+        if kind == "crash":
+            # an injector plan entry fired: die like a real pod — SIGKILL,
+            # no cleanup, no exception propagation
+            os.kill(os.getpid(), signal.SIGKILL)
+        raise RuntimeError(f"store RPC failed: {reply[1]}")
+
+
+class StoreClient(LogBackend):
+    """LogBackend proxy: forwards commits and recovery/lineage/scaling
+    queries to the parent's shared store."""
+
+    def __init__(self, rpc: _Rpc):
+        self.rpc = rpc
+
+    def _commit(self, ops):
+        return self.rpc.call("txn", ops)
+
+    def _q(self, name, *args):
+        return self.rpc.call("store", name, args)
+
+    def is_durable(self, token) -> bool:
+        if token is None:
+            return True
+        return self._q("is_durable", token)
+
+    def flush(self):
+        self._q("flush")
+
+    def maybe_flush(self):
+        self._q("maybe_flush")
+
+    # -- recovery / scaling / lineage queries ------------------------------
+    def fetch_resend_events(self, op_id):
+        return self._q("fetch_resend_events", op_id)
+
+    def fetch_ack_events(self, op_id):
+        return self._q("fetch_ack_events", op_id)
+
+    def fetch_replay_outputs(self, op_id):
+        return self._q("fetch_replay_outputs", op_id)
+
+    def undone_outputs_after(self, op_id, port, min_id):
+        return self._q("undone_outputs_after", op_id, port, min_id)
+
+    def get_write_actions(self, op_id):
+        return self._q("get_write_actions", op_id)
+
+    def get_state(self, op_id):
+        return self._q("get_state", op_id)
+
+    def last_sent_ssn(self, op_id):
+        return self._q("last_sent_ssn", op_id)
+
+    def last_acked(self, op_id):
+        return self._q("last_acked", op_id)
+
+    def event_status(self, key, rec_op=None):
+        return self._q("event_status", key, rec_op)
+
+    def get_read_action(self, op_id, conn_id):
+        return self._q("get_read_action", op_id, conn_id)
+
+    def undone_events_from(self, send_op, rec_op):
+        return self._q("undone_events_from", send_op, rec_op)
+
+    def lineage_insets_of(self, event_key):
+        return self._q("lineage_insets_of", event_key)
+
+    def lineage_events_of_inset(self, rec_op, inset_id):
+        return self._q("lineage_events_of_inset", rec_op, inset_id)
+
+    def lineage_outputs_of_inset(self, send_op, inset_id):
+        return self._q("lineage_outputs_of_inset", send_op, inset_id)
+
+    def insets_of_event(self, event_key, rec_op):
+        return self._q("insets_of_event", event_key, rec_op)
+
+    def consumers_of(self, event_key):
+        return self._q("consumers_of", event_key)
+
+    def gc(self, lineage_ops=()):
+        return self._q("gc", tuple(lineage_ops))
+
+
+class ExternalClient:
+    """ExternalSystem proxy: write actions must land in the parent's
+    durable external system (the ground truth for exactly-once)."""
+
+    def __init__(self, rpc: _Rpc):
+        self.rpc = rpc
+
+    def execute(self, op_id, conn_id, event_id, body) -> bool:
+        return self.rpc.call("ext", "execute", (op_id, conn_id, event_id,
+                                                body))
+
+    def status(self, op_id, conn_id, event_id) -> str:
+        return self.rpc.call("ext", "status", (op_id, conn_id, event_id))
+
+
+class ScratchClient:
+    """ScratchStore backend proxy: effects of non-replayable read actions
+    must survive worker restarts, so they live in the parent."""
+
+    def __init__(self, rpc: _Rpc):
+        self.rpc = rpc
+
+    def put(self, key, value):
+        self.rpc.call("scratch", "put", (key, value))
+
+    def get(self, key):
+        return self.rpc.call("scratch", "get", (key,))
+
+    def drop(self, key):
+        self.rpc.call("scratch", "drop", (key,))
+
+
+class InjectorClient:
+    """crash_point proxy. The injector's plan lives in the parent (it must
+    survive worker restarts); a firing entry kills this worker with
+    SIGKILL — real process death, not an exception."""
+
+    def __init__(self, rpc: _Rpc):
+        self.rpc = rpc
+
+    def __call__(self, op_id: str, point: str):
+        self.rpc.call("inj", op_id, point)
+
+
+class WorkerChannel(Channel):
+    """Worker-local replica of one authoritative parent channel. The
+    parent streams deliveries into ``deliver``; consumption verbs forward
+    so the authoritative buffer (which survives this process) tracks the
+    replica exactly."""
+
+    def __init__(self, tr_conn, send_op, send_port, rec_op, rec_port):
+        super().__init__(send_op, send_port, rec_op, rec_port,
+                         capacity=1_000_000)
+        self._tr = tr_conn
+
+    def deliver(self, ev):
+        with self._cv:
+            self._buf.append(ev)
+
+    def put(self, ev, stop_flag=None, timeout: float = 0.05) -> bool:
+        self._tr.send(("put", self.name, ev))
+        return True
+
+    def ack(self):
+        ev = super().ack()
+        if ev is not None:
+            self._tr.send(("ack", self.name))
+        return ev
+
+    def defer_ack(self):
+        with self._cv:
+            if len(self._buf) > self._pending:
+                self._pending += 1
+                self._tr.send(("defer", self.name))
+
+    def release_ack(self):
+        ev = super().release_ack()
+        if ev is not None:
+            self._tr.send(("release", self.name))
+        return ev
+
+
+def _worker_main(engine, group: str, rpc_conn, tr_conn, recover: bool):
+    """The forked worker: rebuild the group's operators against proxy
+    store/external/channels, recover if asked, then run the thread-mode
+    group loop with deliveries arriving over the transport pipe."""
+    rpc = _Rpc(rpc_conn)
+    store = StoreClient(rpc)
+    external = ExternalClient(rpc)
+    injector = InjectorClient(rpc)
+    ScratchStore.backend = ScratchClient(rpc)
+
+    pipeline = engine.pipeline
+    group_ops = [o for o, g in pipeline.groups.items() if g == group]
+    channels: Dict[str, WorkerChannel] = {}
+    for ch in engine.channels:
+        if ch.rec_op in group_ops or ch.send_op in group_ops:
+            channels[ch.name] = WorkerChannel(tr_conn, ch.send_op,
+                                              ch.send_port, ch.rec_op,
+                                              ch.rec_port)
+    ops, runtimes = {}, {}
+    for op_id in group_ops:
+        op = pipeline.factories[op_id]()
+        op.state = "restarted" if recover else "running"
+        op.in_channels = {}
+        op.out_channels = {p: [] for p in op.output_ports}
+        for ch in channels.values():
+            if ch.rec_op == op_id:
+                op.in_channels[ch.rec_port] = ch
+            if ch.send_op == op_id:
+                op.out_channels.setdefault(ch.send_port, []).append(ch)
+        lin_in, lin_out = engine._lineage_ports.get(op_id, (set(), set()))
+        ops[op_id] = op
+        runtimes[op_id] = OperatorRuntime(
+            op, store, lineage_in=lin_in, lineage_out=lin_out,
+            external=external, crash_point=injector,
+            replay_mode=op_id in engine.replay_ops,
+            keep_state_history=bool(lin_out))
+
+    if recover:
+        for op_id in group_ops:
+            op = ops[op_id]
+            is_source = isinstance(op, GeneratorSource)
+            replay_pred_ports = {dp for s, sp, d, dp, _ in
+                                 pipeline.connections
+                                 if d == op_id and s in engine.replay_ops}
+            recover_operator(runtimes[op_id], is_source=is_source,
+                             source_driver=GeneratorSource.driver
+                             if is_source else None,
+                             replay_pred_ports=replay_pred_ports)
+
+    sources = [op for op in ops.values() if isinstance(op, GeneratorSource)]
+    n_received = 0
+    last_idle: Optional[dict] = None
+    last_stats = 0.0
+    force = False
+
+    def step_op(op) -> bool:
+        if isinstance(op, GeneratorSource):
+            return op.step()
+        progressed = False
+        for port in op.input_ports:
+            ch = op.in_channels.get(port)
+            if ch is None:
+                continue
+            ev = ch.peek()
+            if ev is not None:
+                runtimes[op.id].handle_input(port, ev)
+                progressed = True
+        return progressed
+
+    def send_stats():
+        tr_conn.send(("stats", {o: dict(runtimes[o].stats)
+                                for o in group_ops}))
+
+    while True:
+        while tr_conn.poll(0):
+            msg = tr_conn.recv()
+            kind = msg[0]
+            if kind == "ev":
+                ch = channels.get(msg[1])
+                if ch is not None:
+                    ch.deliver(msg[2])
+                n_received += 1
+            elif kind == "force":
+                force = True
+            elif kind == "stop":
+                return
+
+        progressed = False
+        for op_id in group_ops:
+            progressed |= step_op(ops[op_id])
+            progressed |= runtimes[op_id].drain_durable()
+        if not progressed and force:
+            # end of stream (per the supervisor): push the durability
+            # watermark so held acks/external writes release
+            for op_id in group_ops:
+                progressed |= runtimes[op_id].drain_durable(force=True)
+            force = False
+
+        now = time.time()
+        if progressed:
+            last_idle = None
+            if now - last_stats >= 0.05:
+                send_stats()
+                last_stats = now
+            continue
+        state = {
+            "n_received": n_received,
+            "exhausted": all(s.exhausted for s in sources),
+            "deferred": sum(len(runtimes[o]._deferred) for o in group_ops),
+            "pending": any(ops[o].has_pending() for o in group_ops),
+        }
+        if state != last_idle:
+            send_stats()
+            tr_conn.send(("idle", state))
+            last_idle = state
+        tr_conn.poll(0.005)
+
+
+def _worker_entry(engine, group, rpc_conn, tr_conn, recover):
+    try:
+        _worker_main(engine, group, rpc_conn, tr_conn, recover)
+    except (EOFError, BrokenPipeError, OSError):
+        pass                       # parent stopped / pipe torn down
+    finally:
+        # skip interpreter teardown: the fork inherited parent resources
+        # (sqlite connections, thread locks) that must not be finalized here
+        os._exit(0)
+
+
+# ---------------------------------------------------------------------------
+# Parent side
+# ---------------------------------------------------------------------------
+
+class _WorkerHandle:
+    def __init__(self, group: str):
+        self.group = group
+        self.proc: Optional[Any] = None
+        self.rpc_conn = None
+        self.tr_conn = None
+        self.rpc_thread: Optional[threading.Thread] = None
+        self.tr_thread: Optional[threading.Thread] = None
+        self.send_lock = threading.Lock()
+        # serializes delivery pumping toward this worker: held for a whole
+        # pump loop, and by the restart path while it rewinds cursors, so a
+        # stale pump can never interleave with a fresh incarnation
+        self.pump_lock = threading.Lock()
+        self.sent = 0                  # "ev" deliveries to this incarnation
+        self.last_idle: Optional[dict] = None
+        self.alive = False
+        self.stopping = False
+        self.restarts = 0              # total for this group (never reset)
+
+    def send(self, msg) -> bool:
+        with self.send_lock:
+            if not self.alive:
+                return False
+            try:
+                self.tr_conn.send(msg)
+                return True
+            except (BrokenPipeError, OSError):
+                return False
+
+
+class ProcessEngineDriver:
+    """Supervisor + router: spawns one forked worker per operator group,
+    owns the authoritative channels/store/external/injector, detects
+    worker death (SIGKILL included) and warm-restarts only the failed
+    group while the rest keep processing."""
+
+    def __init__(self, engine):
+        self.e = engine
+        self.lock = threading.RLock()
+        self.workers: Dict[str, _WorkerHandle] = {}
+        self.ch_by_name: Dict[str, Channel] = {}
+        self.inflight: Dict[str, int] = {}       # channel -> delivered, unconsumed
+        self._stop = threading.Event()
+        self._failed = threading.Event()
+        self._supervisor: Optional[threading.Thread] = None
+        # cumulative per-op event counters across worker incarnations
+        # (live worker stats land in _op_stats_live, folded into
+        # _op_stats_base when the incarnation dies)
+        self._op_stats_base: Dict[str, Dict[str, int]] = {}
+        self._op_stats_live: Dict[str, Dict[str, int]] = {}
+        self.refresh_channels()
+
+    # ---- channel bookkeeping --------------------------------------------
+    def refresh_channels(self):
+        """(Re)index the engine's authoritative channels — called at start
+        and after dynamic-scaling topology changes."""
+        with self.lock:
+            self.ch_by_name = {ch.name: ch for ch in self.e.channels}
+            for name in self.ch_by_name:
+                self.inflight.setdefault(name, 0)
+            for name in list(self.inflight):
+                if name not in self.ch_by_name:
+                    del self.inflight[name]
+
+    def _pump(self, name: str):
+        """Stream the channel's undelivered suffix to its receiving
+        worker. Cursor reads/updates happen under ``self.lock``; the
+        (possibly blocking) pipe send happens OUTSIDE it, under the
+        worker's ``pump_lock``, so one slow worker's full pipe never
+        stalls routing for the other workers or the supervisor."""
+        with self.lock:
+            ch = self.ch_by_name.get(name)
+            if ch is None:
+                return
+            h = self.workers.get(self.e.pipeline.groups.get(ch.rec_op))
+        if h is None:
+            return
+        with h.pump_lock:
+            while True:
+                with self.lock:
+                    if self.ch_by_name.get(name) is not ch or not h.alive:
+                        return
+                    ev = ch.peek_index(self.inflight.get(name, 0))
+                if ev is None:
+                    return
+                if not h.send(("ev", name, ev)):
+                    return
+                with self.lock:
+                    self.inflight[name] += 1
+                    h.sent += 1
+
+    def _pump_group(self, group: str):
+        with self.lock:
+            names = [name for name, ch in self.ch_by_name.items()
+                     if self.e.pipeline.groups.get(ch.rec_op) == group]
+        for name in names:
+            self._pump(name)
+
+    def pump_all(self):
+        """Deliver any undelivered suffix on every channel (used after
+        dynamic-scaling rewires put events in from the parent side)."""
+        with self.lock:
+            names = list(self.ch_by_name)
+        for name in names:
+            self._pump(name)
+
+    # ---- lifecycle -------------------------------------------------------
+    def start(self):
+        for g in sorted(set(self.e.pipeline.groups.values())):
+            self._spawn(g, recover=self.e._resume)
+        self._supervisor = threading.Thread(target=self._supervise,
+                                            daemon=True, name="proc-super")
+        self._supervisor.start()
+
+    def _spawn(self, group: str, recover: bool):
+        with self.lock:
+            h = self.workers.get(group)
+            if h is None:
+                h = _WorkerHandle(group)
+                self.workers[group] = h
+            rpc_parent, rpc_child = _CTX.Pipe()
+            tr_parent, tr_child = _CTX.Pipe()
+            h.rpc_conn, h.tr_conn = rpc_parent, tr_parent
+            h.sent = 0
+            h.last_idle = None
+            h.stopping = False
+            proc = _CTX.Process(target=_worker_entry,
+                                args=(self.e, group, rpc_child, tr_child,
+                                      recover),
+                                daemon=True, name=f"logio-{group}")
+            proc.start()
+            rpc_child.close()
+            tr_child.close()
+            h.proc = proc
+            h.alive = True
+            self.e.group_state[group] = "running"
+            h.rpc_thread = threading.Thread(
+                target=self._rpc_loop, args=(h,), daemon=True,
+                name=f"rpc-{group}")
+            h.tr_thread = threading.Thread(
+                target=self._tr_loop, args=(h,), daemon=True,
+                name=f"tr-{group}")
+            h.rpc_thread.start()
+            h.tr_thread.start()
+        self._pump_group(group)
+
+    # ---- parent router threads ------------------------------------------
+    def _rpc_loop(self, h: _WorkerHandle):
+        store, ext = self.e.store, self.e.external
+        conn = h.rpc_conn
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                return
+            kind = msg[0]
+            try:
+                if kind == "txn":
+                    try:
+                        reply = ("ok", store._commit(msg[1]))
+                    except TxnAborted as exc:
+                        reply = ("abort", str(exc))
+                elif kind == "store":
+                    reply = ("ok", getattr(store, msg[1])(*msg[2]))
+                elif kind == "ext":
+                    reply = ("ok", getattr(ext, msg[1])(*msg[2]))
+                elif kind == "scratch":
+                    reply = ("ok", getattr(ScratchStore, msg[1])(*msg[2]))
+                elif kind == "inj":
+                    try:
+                        self.e.injector(msg[1], msg[2])
+                        reply = ("ok", None)
+                    except SimulatedCrash:
+                        reply = ("crash",)
+                else:
+                    reply = ("err", f"unknown RPC {kind!r}")
+            except Exception as exc:   # surface store errors in the worker
+                reply = ("err", f"{type(exc).__name__}: {exc}")
+            try:
+                conn.send(reply)
+            except (BrokenPipeError, OSError):
+                return
+
+    def _tr_loop(self, h: _WorkerHandle):
+        conn = h.tr_conn
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                return
+            kind = msg[0]
+            pump = None
+            with self.lock:
+                if kind == "put":
+                    _, name, ev = msg
+                    ch = self.ch_by_name.get(name)
+                    if ch is not None:
+                        # never drop: the sender already logged the event
+                        # as sent (process mode absorbs instead of
+                        # back-pressuring; see docs/process_mode.md)
+                        ch.force_put(ev)
+                        pump = name
+                elif kind == "ack":
+                    ch = self.ch_by_name.get(msg[1])
+                    if ch is not None:
+                        ch.ack()
+                        self.inflight[msg[1]] -= 1
+                elif kind == "defer":
+                    ch = self.ch_by_name.get(msg[1])
+                    if ch is not None:
+                        ch.defer_ack()
+                        self.inflight[msg[1]] -= 1
+                elif kind == "release":
+                    ch = self.ch_by_name.get(msg[1])
+                    if ch is not None:
+                        ch.release_ack()
+                elif kind == "idle":
+                    h.last_idle = msg[1]
+                elif kind == "stats":
+                    self._op_stats_live[h.group] = {
+                        op: s.get("events_in", 0) + s.get("events_out", 0)
+                        for op, s in msg[1].items()}
+            if pump is not None:
+                # pipe send outside self.lock: a full pipe toward a slow
+                # receiver must not stall this router thread's peers
+                self._pump(pump)
+
+    # ---- supervision -----------------------------------------------------
+    def _supervise(self):
+        while not self._stop.is_set():
+            self._check_deaths()
+            if self._check_done():
+                self.e._done.set()
+                return
+            time.sleep(0.005)
+
+    def _check_deaths(self):
+        dead: List[_WorkerHandle] = []
+        with self.lock:
+            for h in self.workers.values():
+                if h.alive and h.proc is not None and not h.proc.is_alive() \
+                        and not h.stopping:
+                    h.alive = False
+                    dead.append(h)
+        for h in dead:
+            self._on_worker_death(h)
+
+    def _on_worker_death(self, h: _WorkerHandle):
+        """A worker died (SIGKILL, injected crash, or error). Volatile
+        state is gone; the store, the authoritative channels and the
+        external system live in this process — roll back per the log by
+        warm-restarting only this group (non-blocking for the others)."""
+        group = h.group
+        self.e.failures += 1
+        self.e.group_state[group] = "dead"
+        h.proc.join()
+        # drain every message the worker managed to send before dying
+        for t in (h.rpc_thread, h.tr_thread):
+            if t is not None:
+                t.join(timeout=5.0)
+        # hold the pump lock across the cursor rewind: a stale pump from
+        # the dead incarnation (blocked in a pipe send) must finish or fail
+        # before the cursors move, and cannot interleave with the fresh one
+        with h.pump_lock:
+            with self.lock:
+                base = self._op_stats_base.setdefault(group, {})
+                for op, n in self._op_stats_live.pop(group, {}).items():
+                    base[op] = base.get(op, 0) + n
+                h.restarts += 1
+                if h.restarts > MAX_RESTARTS_PER_GROUP:
+                    self.e.group_state[group] = "failed"
+                    self._failed.set()
+                    return
+                # unreleased deliveries become deliverable again; the
+                # restarted group's obsolete filters drop what recovery
+                # already covered
+                for name, ch in self.ch_by_name.items():
+                    if self.e.pipeline.groups.get(ch.rec_op) == group:
+                        ch.reset_pending()
+                        self.inflight[name] = 0
+        if self.e.restart_delay > 0:
+            time.sleep(self.e.restart_delay)       # warm pod restart
+        if self._stop.is_set():
+            return
+        self.e.restarts += 1
+        self._spawn(group, recover=True)
+
+    def _check_done(self) -> bool:
+        to_force: List[_WorkerHandle] = []
+        with self.lock:
+            if self._failed.is_set():
+                return False
+            deferred = 0
+            for h in self.workers.values():
+                if self.e.group_state.get(h.group) == "removed":
+                    continue
+                st = h.last_idle
+                if not h.alive or st is None \
+                        or st["n_received"] != h.sent \
+                        or not st["exhausted"] or st["pending"]:
+                    return False
+                deferred += st["deferred"]
+            if any(self.inflight.get(n, 0) for n in self.ch_by_name):
+                return False
+            if deferred == 0 and \
+                    all(len(ch) == 0 for ch in self.ch_by_name.values()):
+                return True
+            # quiescent but effects still gated on the durability
+            # watermark: force-drain (end of stream — batches cannot grow)
+            for h in self.workers.values():
+                if h.alive and (h.last_idle or {}).get("deferred"):
+                    h.last_idle = None
+                    to_force.append(h)
+        for h in to_force:       # pipe sends outside the driver lock
+            h.send(("force",))
+        return False
+
+    # ---- external controls ----------------------------------------------
+    def kill_group(self, group: str):
+        """SIGKILL the group's worker — genuine node failure."""
+        with self.lock:
+            h = self.workers.get(group)
+            pid = h.proc.pid if h is not None and h.alive else None
+        if pid is not None:
+            try:
+                os.kill(pid, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+
+    def stop_group(self, group: str, *, remove: bool = False):
+        """Stop a worker deliberately (dynamic scaling): not a failure."""
+        with self.lock:
+            h = self.workers.get(group)
+            if h is None:
+                return
+            h.stopping = True
+        h.send(("stop",))
+        if h.proc is not None:
+            h.proc.join(timeout=2.0)
+            if h.proc.is_alive():
+                h.proc.kill()
+                h.proc.join()
+        # drain the router threads BEFORE folding the stats — a buffered
+        # final "stats" message would otherwise re-populate the live map
+        # after the fold and double-count the incarnation
+        for t in (h.rpc_thread, h.tr_thread):
+            if t is not None:
+                t.join(timeout=5.0)
+        with self.lock:
+            h.alive = False
+            base = self._op_stats_base.setdefault(group, {})
+            for op, n in self._op_stats_live.pop(group, {}).items():
+                base[op] = base.get(op, 0) + n
+            if remove:
+                self.workers.pop(group, None)
+
+    def start_group(self, group: str, *, recover: bool):
+        """(Re)start a group's worker (dynamic scaling)."""
+        self.refresh_channels()
+        if recover:
+            h = self.workers.get(group)
+            locks = [h.pump_lock] if h is not None else []
+            for lk in locks:
+                lk.acquire()
+            try:
+                with self.lock:
+                    for name, ch in self.ch_by_name.items():
+                        if self.e.pipeline.groups.get(ch.rec_op) == group:
+                            ch.reset_pending()
+                            self.inflight[name] = 0
+            finally:
+                for lk in locks:
+                    lk.release()
+        self._spawn(group, recover=recover)
+
+    def wait_group_drained(self, group: str, timeout: float = 5.0) -> bool:
+        """Block until the group's worker has consumed every delivery and
+        all channels touching its operators are empty — dynamic scaling
+        must not delete a channel that still buffers a logged-and-sent
+        event (nobody would resend it once the replica is gone)."""
+        group_ops = set(self.e.group_ops(group))
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            with self.lock:
+                h = self.workers.get(group)
+                chans = [ch for ch in self.ch_by_name.values()
+                         if ch.rec_op in group_ops or ch.send_op in group_ops]
+                st = h.last_idle if h is not None else None
+                if h is not None and h.alive and st is not None \
+                        and st["n_received"] == h.sent \
+                        and st["deferred"] == 0 \
+                        and all(len(c) == 0 for c in chans):
+                    return True
+            time.sleep(0.005)
+        return False
+
+    def op_stats(self) -> Dict[str, int]:
+        """Cumulative processed-event counters per operator across worker
+        incarnations (benchmark instrumentation)."""
+        with self.lock:
+            out: Dict[str, int] = {}
+            for g, ops in self._op_stats_base.items():
+                for op, n in ops.items():
+                    out[op] = out.get(op, 0) + n
+            for g, ops in self._op_stats_live.items():
+                for op, n in ops.items():
+                    out[op] = out.get(op, 0) + n
+            return out
+
+    def wait(self, timeout: float) -> bool:
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            if self.e._done.is_set():
+                return True
+            if self._failed.is_set():
+                return False
+            time.sleep(0.005)
+        return False
+
+    def stop(self):
+        self._stop.set()
+        with self.lock:
+            handles = list(self.workers.values())
+        for h in handles:
+            h.stopping = True
+            h.send(("stop",))
+        for h in handles:
+            if h.proc is not None:
+                h.proc.join(timeout=2.0)
+                if h.proc.is_alive():
+                    h.proc.kill()
+                    h.proc.join()
+            h.alive = False
+        if self._supervisor is not None:
+            self._supervisor.join(timeout=5.0)
+        for h in handles:
+            for conn in (h.rpc_conn, h.tr_conn):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            for t in (h.rpc_thread, h.tr_thread):
+                if t is not None:
+                    t.join(timeout=5.0)

@@ -20,14 +20,10 @@ regenerate those outputs (recursively up chains of replay operators).
 """
 from __future__ import annotations
 
-import pickle
-from typing import TYPE_CHECKING, Dict, List, Optional, Set, Tuple
+from typing import Dict, Set, Tuple
 
-from repro.core.events import DONE, REPLAY, UNDONE, Event
-from repro.core.operator import Operator, OperatorRuntime
-
-if TYPE_CHECKING:
-    from repro.core.engine import Engine
+from repro.core.events import REPLAY, UNDONE
+from repro.core.operator import OperatorRuntime
 
 
 def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,

@@ -10,16 +10,23 @@ reassigns them (new destination + new event ids) together with storing its
 state — mutually exclusive with the replica's generation transaction (which
 marks InSets done with ``require_rows``), and (d) re-sends events of O that
 are still undone. Then the Merger drops the input and topology is updated.
+
+Process mode (``Engine(mode="process")``): the Dispatcher/Merger state
+lives in their worker processes, so the controller pauses those two
+workers, performs the state updates against STATE in the shared log (the
+same blobs recovery uses — "acknowledged" == persisted, exactly Alg 12's
+contract), rewires the supervisor's authoritative channels, and
+warm-restarts the workers, which recover the updated state. Replicas, the
+source and the sink keep processing throughout — only the two topology
+parties restart, on live worker processes.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
-from repro.core.builtin import MapOperator
 from repro.core.channels import Channel
-from repro.core.events import DONE, UNDONE, Event
-from repro.core.logstore import LogBackend, TxnAborted
+from repro.core.events import UNDONE, Event
 from repro.core.operator import Operator, OperatorRuntime
 
 
@@ -139,8 +146,190 @@ class Controller:
         self.capacity = capacity
         self.lock = threading.Lock()
 
+    def _reassign_undone(self, disp, rt, replica_id: str, send_fn):
+        """Algorithm 13 steps 1.b-1.d against a dispatcher view (the live
+        operator in thread mode, a STATE-restored copy in process mode).
+        ``send_fn`` re-sends a still-undone reassigned event."""
+        e = self.e
+        # Step 1.b: set O = undone events sent to the replica + new ids
+        keys = e.store.undone_events_from(self.disp_id, replica_id)
+        assignments = []
+        for key in keys:
+            tgt = disp.routes[disp.rr % len(disp.routes)]
+            disp.rr += 1
+            new_port = f"to_{tgt}"
+            new_id = rt.ctx.ssn.get(new_port, 0)
+            rt.ctx.ssn[new_port] = new_id + 1
+            assignments.append((key, new_port, tgt, self.rp_in, new_id))
+        # Step 1.c: atomic reassignment + dispatcher state store. Mutual
+        # exclusion with the replica's generation txn: events that turned
+        # "done" in the meantime are skipped at apply time.
+        txn = e.store.begin()
+        for old_key, new_port, tgt, tport, new_id in assignments:
+            txn.reassign_event(old_key, replica_id,
+                               (self.disp_id, new_port, new_id), tgt, tport)
+        txn.put_state(self.disp_id, rt.new_state_id(), rt._state_blob(),
+                      keep_history=rt.keep_state_history)
+        txn.commit()
+        # Step 1.d: re-send events of O that are still undone (one indexed
+        # scan, not a rescan per assignment)
+        resend = {(ev.send_port, ev.event_id): ev
+                  for ev, _st in e.store.fetch_resend_events(self.disp_id)}
+        for old_key, new_port, tgt, tport, new_id in assignments:
+            still_undone = any(
+                status == UNDONE and ins is None
+                for ins, status in e.store.event_status(
+                    (self.disp_id, new_port, new_id)))
+            ev = resend.get((new_port, new_id))
+            if still_undone and ev is not None:
+                send_fn(ev)
+
+    def _drain_replica_channels(self, replica_id: str, timeout: float = 5.0):
+        """Block until the dying replica's in/out channels are empty and it
+        is not mid-transaction (its op_lock is free), so deleting its
+        channels cannot lose a logged-and-sent output. Best effort: on
+        timeout the topology update proceeds (the replica may be wedged)."""
+        import time as _time
+        e = self.e
+        rt = e.runtimes.get(replica_id)
+        deadline = _time.time() + timeout
+        while _time.time() < deadline:
+            chans = [ch for ch in e.channels
+                     if ch.rec_op == replica_id or ch.send_op == replica_id]
+            if rt is None:
+                if all(len(c) == 0 for c in chans):
+                    return
+            else:
+                with rt.op_lock:     # no handle_input/generate in flight
+                    if all(len(c) == 0 for c in chans) \
+                            and not rt._deferred:
+                        return
+            _time.sleep(0.002)
+
+    # -- process-mode helpers (state updates against STATE in the log) ------
+    def _restored(self, op_id: str):
+        """Fresh operator instance + runtime with its global state and
+        LOG.io context restored from the shared log — the parent-side view
+        of a paused worker's state. Mirrors the worker's runtime config
+        (lineage ports, keep_state_history) so persisting through it
+        cannot truncate a lineage-keeping operator's STATE history."""
+        e = self.e
+        op = e.pipeline.factories[op_id]()
+        lin_in, lin_out = getattr(e, "_lineage_ports", {}).get(
+            op_id, (set(), set()))
+        rt = OperatorRuntime(op, e.store, lineage_in=lin_in,
+                             lineage_out=lin_out, external=e.external,
+                             keep_state_history=bool(lin_out))
+        rt.restore_state()
+        return op, rt
+
+    def _persist_rt(self, rt: OperatorRuntime):
+        txn = self.e.store.begin()
+        txn.put_state(rt.op.id, rt.new_state_id(), rt._state_blob(),
+                      keep_history=rt.keep_state_history)
+        txn.commit()
+
+    def _scale_up_process(self, replica_id: str):
+        e = self.e
+        drv = e._proc
+        disp_group = e.pipeline.groups[self.disp_id]
+        merger_group = e.pipeline.groups[self.merger_id]
+        # pause the two topology parties; their volatile state is exactly
+        # what recovery rebuilds from STATE + the log
+        drv.stop_group(disp_group)
+        if merger_group != disp_group:
+            drv.stop_group(merger_group)
+        # Step 1: deploy replica + create the two connections
+        factory = self.replica_factory(replica_id)
+        e.pipeline.factories[replica_id] = factory
+        e.pipeline.groups[replica_id] = replica_id
+        cap = 1_000_000
+        e.pipeline.connections.append(
+            (self.disp_id, f"to_{replica_id}", replica_id, self.rp_in, cap))
+        e.pipeline.connections.append(
+            (replica_id, self.rp_out, self.merger_id,
+             f"from_{replica_id}", cap))
+        e.channels.append(Channel(self.disp_id, f"to_{replica_id}",
+                                  replica_id, self.rp_in, cap))
+        e.channels.append(Channel(replica_id, self.rp_out, self.merger_id,
+                                  f"from_{replica_id}", cap))
+        e.group_state[replica_id] = "running"
+        # Step 2: Merger state update (ack = state persisted)
+        m_op, m_rt = self._restored(self.merger_id)
+        if replica_id not in m_op.inputs:
+            m_op.inputs.append(replica_id)
+        self._persist_rt(m_rt)
+        # Step 3: Dispatcher state update
+        d_op, d_rt = self._restored(self.disp_id)
+        if replica_id not in d_op.routes:
+            d_op.routes.append(replica_id)
+        self._persist_rt(d_rt)
+        # resume: replica fresh, dispatcher/merger recover the new state
+        drv.start_group(replica_id, recover=False)
+        drv.start_group(disp_group, recover=True)
+        if merger_group != disp_group:
+            drv.start_group(merger_group, recover=True)
+        drv.pump_all()
+
+    def _scale_down_process(self, replica_id: str):
+        e = self.e
+        drv = e._proc
+        disp_group = e.pipeline.groups[self.disp_id]
+        merger_group = e.pipeline.groups[self.merger_id]
+        drv.stop_group(disp_group)
+        # Step 1.a: dispatcher state update (remove route)
+        d_op, d_rt = self._restored(self.disp_id)
+        if replica_id in d_op.routes:
+            d_op.routes.remove(replica_id)
+            d_op._sync_ports()
+
+        def send_to_channel(ev):
+            # straight into the supervisor's authoritative channels;
+            # force_put — the event is logged as sent, dropping it on a
+            # momentarily-full buffer would strand an UNDONE row forever
+            for ch in e.channels:
+                if ch.send_op == self.disp_id \
+                        and ch.send_port == ev.send_port \
+                        and ch.rec_op == ev.rec_op \
+                        and ch.rec_port == ev.rec_port:
+                    ch.force_put(ev)
+
+        # Steps 1.b-1.d; the replica keeps RUNNING — the reassignment
+        # transaction is mutually exclusive with its generation
+        # transactions by validation
+        self._reassign_undone(d_op, d_rt, replica_id, send_to_channel)
+        # drain: replica + merger keep running until the replica's channels
+        # are empty — its logged-and-sent outputs must reach the merger
+        # before the channels are deleted (step 3)
+        drv.wait_group_drained(replica_id)
+        # Step 2: merger update
+        drv.stop_group(replica_id, remove=True)
+        if merger_group != disp_group:
+            drv.stop_group(merger_group)
+        m_op, m_rt = self._restored(self.merger_id)
+        if replica_id in m_op.inputs:
+            m_op.inputs.remove(replica_id)
+        self._persist_rt(m_rt)
+        # Step 3: update topology — delete connections + replica
+        e.pipeline.connections = [
+            c for c in e.pipeline.connections
+            if c[0] != replica_id and c[2] != replica_id]
+        e.channels = [c for c in e.channels
+                      if c.send_op != replica_id and c.rec_op != replica_id]
+        e.group_state[replica_id] = "removed"
+        e.ops.pop(replica_id, None)
+        e.pipeline.factories.pop(replica_id, None)
+        e.pipeline.groups.pop(replica_id, None)
+        drv.start_group(disp_group, recover=True)
+        if merger_group != disp_group:
+            drv.start_group(merger_group, recover=True)
+        drv.pump_all()
+
     # -- Algorithm 12 -------------------------------------------------------
     def scale_up(self, replica_id: str):
+        if self.e.mode == "process":
+            with self.lock:
+                return self._scale_up_process(replica_id)
         with self.lock:
             e = self.e
             # Step 1: deploy replica + create the two connections (warm start)
@@ -165,62 +354,52 @@ class Controller:
                 op, e.store, external=e.external, crash_point=e.injector,
                 stop_flag=e._stop.is_set)
             e.group_state[replica_id] = "running"
-            # Step 2: Merger state update (ack = state persisted)
+            # Step 2: Merger state update (ack = state persisted) — under
+            # its op_lock so the update serializes with its processing
             merger = e.ops[self.merger_id]
-            merger.inputs.append(replica_id)
-            merger._sync_ports()
-            e._wire(merger)
-            self._persist(merger)
+            with e.runtimes[self.merger_id].op_lock:
+                merger.inputs.append(replica_id)
+                merger._sync_ports()
+                e._wire(merger)
+                self._persist(merger)
             # Step 3: Dispatcher state update
             disp = e.ops[self.disp_id]
-            disp.routes.append(replica_id)
-            disp._sync_ports()
-            e._wire(disp)
-            self._persist(disp)
+            with e.runtimes[self.disp_id].op_lock:
+                disp.routes.append(replica_id)
+                disp._sync_ports()
+                e._wire(disp)
+                self._persist(disp)
         if self.e.mode == "thread":
             self.e._start_group(replica_id, recover=False)
 
     # -- Algorithm 13 -------------------------------------------------------
     def scale_down(self, replica_id: str):
+        if self.e.mode == "process":
+            with self.lock:
+                return self._scale_down_process(replica_id)
         with self.lock:
             e = self.e
             disp = e.ops[self.disp_id]
             rt = e.runtimes[self.disp_id]
-            # Step 1.a: dispatcher state update (remove route)
-            if replica_id in disp.routes:
-                disp.routes.remove(replica_id)
-                disp._sync_ports()
-            # Step 1.b: set O = undone events sent to the replica + new ids
-            keys = e.store.undone_events_from(self.disp_id, replica_id)
-            assignments = []
-            for key in keys:
-                tgt = disp.routes[disp.rr % len(disp.routes)]
-                disp.rr += 1
-                new_port = f"to_{tgt}"
-                new_id = rt.ctx.ssn.get(new_port, 0)
-                rt.ctx.ssn[new_port] = new_id + 1
-                assignments.append((key, new_port, tgt, self.rp_in, new_id))
-            # Step 1.c: atomic reassignment + dispatcher state store.
-            # Mutual exclusion with the replica's generation txn: events that
-            # turned "done" in the meantime are skipped at apply time.
-            txn = e.store.begin()
-            for old_key, new_port, tgt, tport, new_id in assignments:
-                txn.reassign_event(old_key, replica_id,
-                                   (self.disp_id, new_port, new_id),
-                                   tgt, tport)
-            txn.put_state(self.disp_id, rt.new_state_id(), rt._state_blob(),
-                          keep_history=rt.keep_state_history)
-            txn.commit()
-            # Step 1.d: send events of O that are still undone
-            for old_key, new_port, tgt, tport, new_id in assignments:
-                for ins, status in e.store.event_status(
-                        (self.disp_id, new_port, new_id)):
-                    if status == UNDONE and ins is None:
-                        ev, _st = [x for x in
-                                   e.store.fetch_resend_events(self.disp_id)
-                                   if x[0].event_id == new_id
-                                   and x[0].send_port == new_port][0]
-                        rt._send(ev)
+            # Steps 1.a-1.d run under the dispatcher's op_lock: its state
+            # update must be serialized with its own generation — without
+            # this, a generate() that picked the dying replica before 1.a
+            # can log its event AFTER the 1.b snapshot, stranding it in the
+            # channel that step 3 deletes (a lost event).
+            with rt.op_lock:
+                # Step 1.a: dispatcher state update (remove route)
+                if replica_id in disp.routes:
+                    disp.routes.remove(replica_id)
+                    disp._sync_ports()
+                # Steps 1.b-1.d (shared with process mode)
+                self._reassign_undone(disp, rt, replica_id, rt._send)
+            # drain: the replica's channels must empty before the topology
+            # update — step 3 deletes them, and an output the replica
+            # already logged+sent but the merger has not yet consumed would
+            # be lost with the buffer (nobody resends it: the replica is
+            # being removed). The replica keeps running here: stale inputs
+            # abort at assign-insets (their rows were reassigned) and ack.
+            self._drain_replica_channels(replica_id)
             # Step 2: merger update
             merger = e.ops[self.merger_id]
             if replica_id in merger.inputs:

@@ -16,7 +16,6 @@ shards it was trained on.
 from __future__ import annotations
 
 import queue
-import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np

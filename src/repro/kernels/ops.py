@@ -11,7 +11,6 @@ import os
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa

@@ -37,7 +37,6 @@ ICI_BW = 50e9            # bytes/s per link
 def _cell_result(arch_name: str, shape_name: str, multi_pod: bool,
                  overrides: dict):
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import ALL_SHAPES, get_config
     from repro.launch import input_specs as ispec

@@ -7,7 +7,7 @@ are all ``jax.eval_shape`` / ``ShapeDtypeStruct`` trees, matched with
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

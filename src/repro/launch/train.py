@@ -26,7 +26,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointStore
 from repro.configs import get_config, reduced

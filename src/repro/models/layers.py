@@ -12,7 +12,6 @@ prefill without materialising the full S x S score matrix); on TPU the Pallas
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
 from typing import Any, Dict, Optional, Tuple
@@ -21,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import ArchConfig, AttnSpec, LayerSpec
+from repro.configs.base import ArchConfig, AttnSpec
 
 Params = Dict[str, Any]
 

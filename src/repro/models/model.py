@@ -15,9 +15,8 @@ Public API:
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

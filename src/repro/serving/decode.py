@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -5,3 +5,42 @@ import sys
 # process only); make sure nothing leaks XLA_FLAGS into the test run
 os.environ.pop("XLA_FLAGS", None)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import pytest  # noqa: E402  (sys.path fix must precede imports)
+
+# ---------------------------------------------------------------------------
+# Log-backend matrix: the recovery matrix (and everything else using the
+# ``store_spec`` fixture) runs against a set of backend stacks selected by
+# the LOGIO_STORE_SPEC env var — the CI matrix axis:
+#
+#   unset / "memory"  -> the four memory-family stacks (fast local default)
+#   "sqlite"          -> durable sqlite stacks
+#   "sharded+group"   -> the epoch-flushing (2PC) sharded stacks
+#   "all"             -> the union (nightly)
+#   anything else     -> comma list of literal build_store specs
+# ---------------------------------------------------------------------------
+
+_SPEC_SETS = {
+    "memory": ["memory", "memory+sharded", "memory+group",
+               "memory+sharded+group"],
+    "sqlite": ["sqlite", "sqlite+group"],
+    "sharded+group": ["memory+sharded+group", "sqlite+sharded+group"],
+}
+_SPEC_SETS["all"] = (_SPEC_SETS["memory"] + _SPEC_SETS["sqlite"]
+                     + ["sqlite+sharded+group"])
+
+
+def active_store_specs():
+    sel = os.environ.get("LOGIO_STORE_SPEC", "").strip()
+    if not sel:
+        return _SPEC_SETS["memory"]
+    if sel in _SPEC_SETS:
+        return _SPEC_SETS[sel]
+    return [s.strip() for s in sel.split(",") if s.strip()]
+
+
+@pytest.fixture(params=active_store_specs())
+def store_spec(request):
+    """Backend-stack spec string for ``tests.helpers.mk_store`` — the
+    protocol must be oblivious to the storage stack behind LogBackend."""
+    return request.param

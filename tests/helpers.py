@@ -1,18 +1,81 @@
 """Shared pipeline builders + expectations for the test suite."""
 from __future__ import annotations
 
-from repro.core import (CountWindowOperator, Engine, FailureInjector,
-                        GeneratorSource, LineageScope, MapOperator, Pipeline,
-                        ReadSource, SyncJoinOperator, TerminalSink)
+import os
+import tempfile
+
+from repro.core import (CountWindowOperator, Engine, GeneratorSource,
+                        MapOperator, Pipeline, ReadSource, SyncJoinOperator,
+                        TerminalSink)
+from repro.core.logstore import build_store
+
+
+def mk_store(spec: str, **kw):
+    """build_store with a fresh temp path for sqlite-family specs, so each
+    test case gets its own durable files."""
+    if spec.startswith("sqlite") and "path" not in kw:
+        d = tempfile.mkdtemp(prefix="logio-db-")
+        kw["path"] = os.path.join(d, "log.db")
+    return build_store(spec, **kw)
+
+
+class FileExternalSystem:
+    """Durable, checkable external system backed by an append-only file —
+    survives a ``kill -9`` of the whole engine process (the paper's
+    external destination is a durable third party). A torn final record
+    (killed mid-append) is ignored, like a real system dropping a partial
+    request."""
+
+    def __init__(self, path: str):
+        import pickle
+        import threading
+        self.path = path
+        self._pickle = pickle
+        self._lock = threading.Lock()   # RPC threads of different workers
+        self.writes = {}
+        self.order = []
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                while True:
+                    try:
+                        k, body = self._pickle.load(f)
+                    except (EOFError, self._pickle.UnpicklingError):
+                        break
+                    if k not in self.writes:
+                        self.writes[k] = body
+                        self.order.append(k)
+
+    def execute(self, op_id, conn_id, event_id, body) -> bool:
+        k = (op_id, conn_id, event_id)
+        with self._lock:
+            if k not in self.writes:
+                with open(self.path, "ab") as f:
+                    self._pickle.dump((k, body), f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                self.writes[k] = body
+                self.order.append(k)
+        return True
+
+    def status(self, op_id, conn_id, event_id) -> str:
+        with self._lock:
+            return "success" if (op_id, conn_id, event_id) in self.writes \
+                else "unknown"
+
+    def committed(self):
+        with self._lock:
+            return [self.writes[k] for k in self.order]
 
 
 def linear_pipeline(n_events: int = 20, window: int = 4,
-                    sink_target: int = 5, writes: int = 0):
+                    sink_target: int = 5, writes: int = 0,
+                    rate: float = 0.0):
     """src -> map(x2) -> win(sum of window) -> sink."""
     def build():
         p = Pipeline()
         p.add(lambda: GeneratorSource(
-            "src", ReadSource([{"v": i} for i in range(n_events)])))
+            "src", ReadSource([{"v": i} for i in range(n_events)]),
+            rate=rate))
         p.add(lambda: MapOperator("map", fn=lambda b: {"v": b["v"] * 2}))
         p.add(lambda: CountWindowOperator(
             "win", window, agg=lambda bs: {"s": sum(b["v"] for b in bs)},

@@ -1,0 +1,34 @@
+"""Subprocess target for the true ``kill -9`` crash tests: run the linear
+pipeline in process mode on a durable sqlite-family store until the parent
+test SIGKILLs this whole process tree mid-run.
+
+Usage: python tests/kill9_runner.py <store_spec> <db_path> <external_path>
+(The parent sets PYTHONPATH so ``repro`` and ``tests`` import.)
+"""
+import sys
+
+from repro.core import Engine
+from repro.core.logstore import build_store
+from tests.helpers import FileExternalSystem, linear_pipeline
+
+
+def main():
+    spec, db_path, ext_path = sys.argv[1], sys.argv[2], sys.argv[3]
+    build, _expected = linear_pipeline(writes=1, rate=0.01)
+    # no time-based flushing: whatever the watermark has not flushed when
+    # the SIGKILL lands is a genuinely unflushed (or uncommitted) epoch
+    store = build_store(spec, path=db_path, shards=3, batch_size=4,
+                        interval=60.0)
+    eng = Engine(build(), mode="process", store=store,
+                 external=FileExternalSystem(ext_path), restart_delay=0.01)
+    eng.start()
+    print("READY", flush=True)
+    eng.wait(60)
+    print("DONE", flush=True)
+    # stay alive (holding the unflushed tail) until the parent kills us
+    import time
+    time.sleep(60)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,9 +9,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, get_config, reduced, shapes_for
+from repro.configs import ARCHS, reduced, shapes_for
 from repro.models import model as M
-from repro.training.loss import loss_fn
 from repro.training.optimizer import OptHParams
 from repro.training.step import init_train_state, train_step
 

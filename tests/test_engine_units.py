@@ -1,6 +1,5 @@
 """Engine-internal unit tests: FailureInjector nth-crash semantics and the
 channel deferred-ack cursor used by group-commit pipelining."""
-import pytest
 
 from repro.core import Channel, Event, FailureInjector
 from repro.core.operator import SimulatedCrash

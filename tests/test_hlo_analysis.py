@@ -1,5 +1,4 @@
 """Unit tests for the loop-aware HLO analyzer (roofline source of truth)."""
-import numpy as np
 import pytest
 
 import jax

@@ -7,8 +7,7 @@ import os
 import pytest
 
 from repro.core import (Event, GroupCommitStore, MemoryLogStore,
-                        ShardedLogStore, SqliteLogStore, TxnAborted,
-                        build_store)
+                        SqliteLogStore, TxnAborted, build_store)
 from repro.core.events import DONE, UNDONE
 
 STORE_SPECS = ["memory", "memory+sharded", "memory+group",
@@ -258,3 +257,131 @@ def test_sharded_group_crash_per_shard_watermark():
     txn.commit()
     store.crash()       # event 2 unflushed -> lost; 0 and 1 durable
     assert [e.event_id for e, _ in store.fetch_resend_events("A")] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Global flush epochs (2PC): the sharded+group flush protocol
+# ---------------------------------------------------------------------------
+
+def _epoch_prepare_only(store, events):
+    """Drive the flush protocol up to (but not including) the epoch-commit
+    record: cut + prepare every shard, then 'crash' before the commit
+    point — the window the old all-locks barrier closed by blocking."""
+    for ev in events:
+        txn = store.begin()
+        txn.log_event(ev, UNDONE)
+        txn.put_event_data(ev)
+        txn.commit()
+    eid = store.epoch_coord.next_epoch()
+    with store._epoch_barrier.write():
+        cut = [(s, s.cut_pending(eid)) for s in store._group_shards]
+    for s, batch in cut:
+        if batch:
+            s.persist_prepared(eid)
+    return eid
+
+
+@pytest.mark.parametrize("base", ["memory", "sqlite"])
+def test_epoch_crash_between_prepare_and_commit(base, tmp_path):
+    """A crash after every shard prepared but before the epoch-commit
+    record rolls the whole epoch back — no shard keeps its slice, so no
+    multi-shard transaction is half-durable."""
+    kw = {"path": os.path.join(tmp_path, "log.db")} if base == "sqlite" else {}
+    store = build_store(f"{base}+sharded+group", shards=3, batch_size=100,
+                        interval=60.0, **kw)
+    durable = [_ev(i) for i in range(4)]
+    for ev in durable:
+        txn = store.begin()
+        txn.log_event(ev, UNDONE)
+        txn.put_event_data(ev)
+        txn.commit()
+    store.flush()
+    # rows homed at different receivers => slices in different shards
+    lost = [Event(10, "A", "out", "B", "in"), Event(11, "A", "out", "C", "in"),
+            Event(12, "A", "out", "D", "in")]
+    _epoch_prepare_only(store, lost)
+    store.crash()
+    got = sorted(e.event_id for e, _ in store.fetch_resend_events("A"))
+    assert got == [0, 1, 2, 3], got
+
+
+def test_epoch_crash_after_commit_record_is_durable(tmp_path):
+    """The epoch-commit record is the atomicity point: once it lands, a
+    crash before the shards advance their watermarks must still surface
+    the whole epoch after restart."""
+    path = os.path.join(tmp_path, "log.db")
+    store = build_store("sqlite+sharded+group", shards=3, batch_size=100,
+                        interval=60.0, path=path)
+    evs = [Event(i, "A", "out", r, "in")
+           for i, r in enumerate(["B", "C", "D"])]
+    eid = _epoch_prepare_only(store, evs)
+    store.epoch_coord.commit_epoch(eid)     # commit point reached
+    store.close()
+    # real restart: fresh stack over the surviving files
+    store2 = build_store("sqlite+sharded+group", shards=3, batch_size=100,
+                         interval=60.0, path=path)
+    got = sorted(e.event_id for e, _ in store2.fetch_resend_events("A"))
+    assert got == [0, 1, 2], got
+    store2.close()
+
+
+def test_epoch_restart_rolls_back_uncommitted_epoch(tmp_path):
+    """Real process restart (fresh build_store over the files): WAL rows of
+    a prepared-but-uncommitted epoch are deleted before replay."""
+    path = os.path.join(tmp_path, "log.db")
+    store = build_store("sqlite+sharded+group", shards=3, batch_size=100,
+                        interval=60.0, path=path)
+    durable = [_ev(i) for i in range(3)]
+    for ev in durable:
+        txn = store.begin()
+        txn.log_event(ev, UNDONE)
+        txn.commit()
+    store.flush()
+    _epoch_prepare_only(store, [Event(7, "A", "out", "B", "in"),
+                                Event(8, "A", "out", "C", "in")])
+    for s in store.shards:      # die without commit_epoch / finish_epoch
+        s.inner.close()
+    store.epoch_coord.close()
+    store2 = build_store("sqlite+sharded+group", shards=3, batch_size=100,
+                         interval=60.0, path=path)
+    got = sorted(e.event_id for e, _ in store2.fetch_resend_events("A"))
+    assert got == [0, 1, 2], got
+    store2.close()
+
+
+def test_epoch_flush_does_not_block_commits():
+    """Commits land while a flush's prepare I/O is in progress (the barrier
+    is exclusive only for the cut), and tokens stay correct."""
+    store = build_store("memory+sharded+group", shards=3, batch_size=1000,
+                        interval=60.0)
+    import threading as _t
+    for i in range(20):
+        txn = store.begin()
+        txn.log_event(_ev(i), UNDONE)
+        txn.commit()
+    stop = _t.Event()
+    errs = []
+
+    def committer():
+        i = 100
+        while not stop.is_set():
+            txn = store.begin()
+            txn.log_event(_ev(i), UNDONE)
+            try:
+                txn.commit()
+            except Exception as exc:   # noqa: BLE001 - surfaced to assert
+                errs.append(exc)
+                return
+            i += 1
+
+    t = _t.Thread(target=committer)
+    t.start()
+    for _ in range(30):
+        store.flush()
+    stop.set()
+    t.join()
+    assert not errs
+    store.flush()
+    rows = store.fetch_resend_events("A")
+    assert len(rows) >= 20
+    assert store.epochs_flushed >= 1

@@ -3,7 +3,6 @@ against Tables 7-9 (like Listing 2) interoperates with the framework."""
 from repro.core import (Engine, GeneratorSource, Operator, Pipeline,
                         ReadSource, TerminalSink)
 from repro.core.api import LogioAPI
-from repro.core.events import Event
 
 
 class ListingStyleOperator(Operator):

@@ -1,0 +1,269 @@
+"""Process-per-group execution (``mode="process"``): real OS processes per
+operator group, SIGKILL-based failure injection, non-blocking warm restart
+of only the failed group, dynamic scaling on live workers, and true
+``kill -9`` of the whole engine tree on durable epoch-flushing stores.
+
+Every injected crash in process mode is a genuine ``kill -9`` of the
+worker (the injector RPC answers ``("crash",)`` and the worker SIGKILLs
+itself), so this matrix exercises the recovery algorithms across actual
+process death — volatile state loss is enforced by the OS, not simulated.
+"""
+import multiprocessing
+import os
+import signal
+import sqlite3
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import (Engine, FailureInjector, GeneratorSource,
+                        MapOperator, Pipeline, ReadSource, TerminalSink)
+from repro.core.scaling import Controller, DispatcherOperator, MergerOperator
+from tests.helpers import (FileExternalSystem, linear_pipeline, mk_store,
+                           sink_outputs)
+
+pytestmark = pytest.mark.skipif(
+    "fork" not in multiprocessing.get_all_start_methods(),
+    reason="process mode forks workers")
+
+# the sqlite family is the deployment target: one durable store shared by
+# every worker process (plain, group-commit, and sharded+group with the
+# global flush-epoch 2PC)
+SQLITE_SPECS = ["sqlite", "sqlite+group", "sqlite+sharded+group"]
+
+
+def _mk(spec):
+    return mk_store(spec, shards=3, batch_size=4, interval=0.001)
+
+
+def _run(build, expected, spec, plan, timeout=60.0, require_fired=True):
+    inj = FailureInjector(plan)
+    eng = Engine(build(), mode="process", store=_mk(spec), injector=inj,
+                 restart_delay=0.02)
+    eng.start()
+    ok = eng.wait(timeout)
+    eng.stop()
+    assert ok, (spec, plan)
+    assert sink_outputs(eng) == expected, (spec, plan)
+    win_writes = [b for b in eng.external.committed()
+                  if isinstance(b, dict) and "inset" in b]
+    assert len(win_writes) == 5, (spec, plan)
+    if require_fired:        # every plan entry SIGKILL'd a live worker
+        assert eng.failures == len(plan), (spec, plan)
+    else:
+        assert eng.failures == len(inj.fired), (spec, plan)
+    return eng
+
+
+# one crash point per protocol phase x operator role — each case SIGKILLs
+# a live worker there and requires exactly-once completion
+MATRIX = [
+    ("src", "source_post_log", 2),
+    ("map", "pre_state_update", 2),
+    ("map", "post_send", 1),
+    ("win", "post_ack_log", 2),
+    ("win", "pre_log", 1),
+    ("win", "post_log", 2),
+    ("sink", "pre_write", 1),
+    ("sink", "post_write_pre_done", 2),
+]
+
+
+@pytest.mark.parametrize("spec", SQLITE_SPECS)
+@pytest.mark.parametrize("op_id,point,nth", MATRIX)
+def test_sigkill_recovery_matrix(op_id, point, nth, spec):
+    build, expected = linear_pipeline(writes=1)
+    _run(build, expected, spec, [(op_id, point, nth)])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("spec", SQLITE_SPECS)
+@pytest.mark.parametrize("op_id", ["src", "map", "win", "sink"])
+@pytest.mark.parametrize("point", ["source_pre_log", "source_post_log",
+                                   "pre_filter", "pre_state_update",
+                                   "post_ack_log", "pre_log", "post_log",
+                                   "post_send", "pre_write",
+                                   "post_write_pre_done"])
+def test_sigkill_recovery_matrix_full(op_id, point, spec):
+    """Nightly: the full crash-point matrix under real process death.
+    Combos whose point never fires for that operator (e.g. a map has no
+    write actions) degenerate to failure-free runs, as in the step-mode
+    matrix."""
+    build, expected = linear_pipeline(writes=1)
+    _run(build, expected, spec, [(op_id, point, 2)], require_fired=False)
+
+
+def test_multiple_worker_kills(store_spec):
+    """Two distinct groups SIGKILL'd in one run (Case 3 of the proof),
+    against the LOGIO_STORE_SPEC-selected backends."""
+    build, expected = linear_pipeline(writes=1)
+    _run(build, expected, store_spec,
+         [("map", "post_ack_log", 2), ("win", "pre_log", 1)])
+
+
+def test_nonblocking_recovery_other_groups_advance():
+    """Kill one group mid-stream; the other workers keep processing while
+    it restarts (the paper's non-blocking property across processes)."""
+    build, expected = linear_pipeline(n_events=200, window=4,
+                                      sink_target=50, writes=1, rate=0.005)
+    eng = Engine(build(), mode="process", store=_mk("sqlite+sharded+group"),
+                 restart_delay=0.3)
+    eng.start()
+    time.sleep(0.3)
+    before = eng.process_stats().get("src", 0)
+    eng.kill_group("win")
+    time.sleep(0.25)         # inside the restart_delay window: win is down
+    during = eng.process_stats().get("src", 0)
+    assert eng.wait(90)
+    eng.stop()
+    assert during > before, "source stalled while win was down"
+    assert eng.failures >= 1
+    assert sink_outputs(eng) == expected
+
+
+def _replica_pipeline(n):
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(n)]), rate=0.002))
+        p.add(lambda: DispatcherOperator("disp", ["r0", "r1"]))
+        p.add(lambda: MapOperator("r0", fn=lambda b: {"v": b["v"] * 2},
+                                  processing_time=0.004))
+        p.add(lambda: MapOperator("r1", fn=lambda b: {"v": b["v"] * 2},
+                                  processing_time=0.004))
+        p.add(lambda: MergerOperator("mrg", ["r0", "r1"]))
+        p.add(lambda: TerminalSink("sink", target=n))
+        p.connect("src", "out", "disp", "in")
+        p.connect("disp", "to_r0", "r0", "in")
+        p.connect("disp", "to_r1", "r1", "in")
+        p.connect("r0", "out", "mrg", "from_r0")
+        p.connect("r1", "out", "mrg", "from_r1")
+        p.connect("mrg", "out", "sink", "in")
+        return p
+    return build
+
+
+def test_scaling_on_live_workers():
+    """Algorithms 12-13 against live worker processes: scale up a new
+    replica process mid-run, then scale one down; replicas + source + sink
+    keep their processes throughout."""
+    n = 60
+    eng = Engine(_replica_pipeline(n)(), mode="process", restart_delay=0.02)
+    ctrl = Controller(
+        eng, "disp", "mrg",
+        replica_factory=lambda rid: (lambda: MapOperator(
+            rid, fn=lambda b: {"v": b["v"] * 2}, processing_time=0.004)))
+    eng.start()
+    time.sleep(0.3)
+    ctrl.scale_up("r2")
+    time.sleep(0.3)
+    ctrl.scale_down("r1")
+    assert eng.wait(90)
+    eng.stop()
+    assert sorted(b["v"] for b in eng.external.committed()) == \
+        sorted(2 * i for i in range(n))
+
+
+def test_scaling_with_worker_kill():
+    """A replica worker SIGKILL'd while another is being scaled in."""
+    n = 60
+    inj = FailureInjector([("r0", "post_log", 3)])
+    eng = Engine(_replica_pipeline(n)(), mode="process", injector=inj,
+                 restart_delay=0.02)
+    ctrl = Controller(
+        eng, "disp", "mrg",
+        replica_factory=lambda rid: (lambda: MapOperator(
+            rid, fn=lambda b: {"v": b["v"] * 2}, processing_time=0.004)))
+    eng.start()
+    time.sleep(0.25)
+    ctrl.scale_up("r2")
+    assert eng.wait(90)
+    eng.stop()
+    assert sorted(b["v"] for b in eng.external.committed()) == \
+        sorted(2 * i for i in range(n))
+    assert eng.failures >= 1
+
+
+# ---------------------------------------------------------------------------
+# True kill -9 of the WHOLE engine process tree (supervisor + workers):
+# exactly the unflushed/uncommitted epochs are lost; a warm restart on the
+# surviving durable files replays to the correct state.
+# ---------------------------------------------------------------------------
+
+def _committed_epochs(db_path):
+    ep = f"{db_path}.epochs"
+    if not os.path.exists(ep):
+        return set()
+    conn = sqlite3.connect(ep)
+    try:
+        return {r[0] for r in conn.execute("SELECT epoch_id FROM epochs")}
+    finally:
+        conn.close()
+
+
+def _shard_files(db_path, spec):
+    if "sharded" in spec:
+        return [p for p in
+                (f"{db_path}.shard{i}" for i in range(8))
+                if os.path.exists(p)]
+    return [db_path] if os.path.exists(db_path) else []
+
+
+@pytest.mark.parametrize("spec", ["sqlite+group", "sqlite+sharded+group"])
+@pytest.mark.parametrize("kill_after", [0.25, 0.6])
+def test_kill9_whole_engine_loses_exactly_unflushed_epoch(spec, kill_after,
+                                                          tmp_path):
+    db_path = str(tmp_path / "log.db")
+    ext_path = str(tmp_path / "external.bin")
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo_root, "src"), repo_root]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.Popen(
+        [sys.executable, os.path.join(repo_root, "tests", "kill9_runner.py"),
+         spec, db_path, ext_path],
+        stdout=subprocess.PIPE, env=env, start_new_session=True)
+    try:
+        assert proc.stdout.readline().strip() == b"READY"
+        time.sleep(kill_after)
+    finally:
+        # kill -9 the whole session: supervisor AND workers, no cleanup
+        try:
+            os.killpg(os.getpgid(proc.pid), signal.SIGKILL)
+        except ProcessLookupError:
+            pass
+        proc.wait()
+
+    # 1) the unflushed epoch is lost, atomically: every epoch-tagged WAL
+    #    row that survived belongs to a committed epoch — after the store
+    #    reopens (running the restart rollback), no row of an uncommitted
+    #    epoch remains in ANY shard (nothing is half-durable).
+    committed = _committed_epochs(db_path)
+    store = mk_store(spec, path=db_path, shards=3, batch_size=4,
+                     interval=60.0)
+    for f in _shard_files(db_path, spec):
+        conn = sqlite3.connect(f)
+        try:
+            leftover = [e for (e,) in conn.execute(
+                "SELECT DISTINCT epoch FROM wal_ops WHERE epoch IS NOT NULL")]
+        finally:
+            conn.close()
+        assert all(e in committed for e in leftover), (f, leftover, committed)
+
+    # 2) warm restart on the recovered store + surviving external system
+    #    replays to the correct state — exactly-once.
+    build, expected = linear_pipeline(writes=1, rate=0.01)
+    eng = Engine(build(), mode="process", store=store,
+                 external=FileExternalSystem(ext_path), resume=True,
+                 restart_delay=0.01)
+    eng.start()
+    ok = eng.wait(90)
+    eng.stop()
+    assert ok
+    assert sink_outputs(eng) == expected
+    win_writes = [b for b in eng.external.committed()
+                  if isinstance(b, dict) and "inset" in b]
+    assert len(win_writes) == 5

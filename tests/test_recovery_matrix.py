@@ -2,28 +2,20 @@
 for the pessimistic (default) and replay-mode (Sec. 5) configurations, plus
 multi-operator simultaneous failures (Case 3 of the correctness proof).
 
-The whole matrix runs against all four log-backend configurations (plain,
-sharded, group-commit, sharded+group) — the protocol must be oblivious to
-the storage stack behind the LogBackend interface."""
+The whole matrix runs against the log-backend configurations selected by
+the LOGIO_STORE_SPEC env var (see ``conftest.py``; the local default is the
+four memory-family stacks, CI adds the sqlite-family ones) — the protocol
+must be oblivious to the storage stack behind the LogBackend interface."""
 import pytest
 
 from repro.core import Engine, FailureInjector, LineageScope
-from repro.core.logstore import build_store
-from tests.helpers import linear_pipeline, sink_outputs
-
-STORE_SPECS = ["memory", "memory+sharded", "memory+group",
-               "memory+sharded+group"]
-
-
-@pytest.fixture(params=STORE_SPECS)
-def store_spec(request):
-    return request.param
+from tests.helpers import linear_pipeline, mk_store, sink_outputs
 
 
 def _mk_store(spec):
     # small batches so group-commit flush boundaries actually interleave
     # with the injected crashes
-    return build_store(spec, shards=3, batch_size=4, interval=0.001)
+    return mk_store(spec, shards=3, batch_size=4, interval=0.001)
 
 
 POINTS = ["source_pre_log", "source_post_log", "pre_filter",
@@ -104,8 +96,8 @@ def test_full_process_crash_replays_to_committed_outputs(store_spec):
     # (6/14/22 historically hit window boundaries mid-batch — they caught
     # the cross-shard partial-durability bug the coordinated flush fixes)
     for steps in (6, 10, 14, 22, 25, 40, 70):
-        store = build_store(store_spec, shards=3, batch_size=4,
-                            interval=60.0)
+        store = mk_store(store_spec, shards=3, batch_size=4,
+                         interval=60.0)
         eng = Engine(build(), mode="step", store=store)
         external = eng.external
         done = eng.run_to_completion(max_steps=steps)
@@ -126,7 +118,7 @@ def test_full_process_crash_resume_in_thread_mode(store_spec):
     if "group" not in store_spec:
         pytest.skip("full-process crash() only loses data with group commit")
     build, expected = linear_pipeline(writes=1)
-    store = build_store(store_spec, shards=3, batch_size=4, interval=60.0)
+    store = mk_store(store_spec, shards=3, batch_size=4, interval=60.0)
     eng = Engine(build(), mode="step", store=store)
     eng.run_to_completion(max_steps=14)
     store.crash()

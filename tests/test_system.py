@@ -1,5 +1,4 @@
 """End-to-end behaviour tests for the LOG.io system (step + thread modes)."""
-import pytest
 
 from repro.core import (Engine, FailureInjector, LineageScope, backward,
                         forward)
@@ -121,8 +120,8 @@ def test_nondeterministic_operator_recovers():
 def test_non_replayable_source():
     """Non-replayable read actions: effect stored first (Alg 1 step 2),
     failures replay from the store, exactly-once output preserved."""
-    from repro.core import (GeneratorSource, MapOperator, Pipeline,
-                            ReadSource, TerminalSink)
+    from repro.core import (GeneratorSource, Pipeline, ReadSource,
+                            TerminalSink)
 
     class OneShotSource(ReadSource):
         """Returns different data on re-execution (non-replayable)."""
