@@ -1,21 +1,32 @@
-"""Process-per-group vs thread-per-group on the UC1 straggler pipeline.
+"""Process-per-group vs thread-per-group on the UC1 straggler pipeline,
+plus the transport back-pressure sweep.
 
-Two measurements:
+Measurements:
 
   * **normal-processing overhead** — the UC1 pipeline (OP3 the straggler)
-    run to completion in ``mode="thread"`` and ``mode="process"``; the
-    derived column is the process-mode overhead %% vs thread mode.  The
-    price of real process isolation is the pipe transport + store RPC per
+    run to completion in ``mode="thread"`` and ``mode="process"`` (both
+    transports); the derived column is the overhead %% vs thread mode.
+    The price of real process isolation is the transport + store RPC per
     event; the straggler hides most of it, exactly like the paper's
-    pessimistic logging hides behind OP3 (Sec. 9.3).
+    pessimistic logging hides behind OP3 (Sec. 9.3).  ``socket`` must be
+    no worse than the ``routed`` hub-and-spoke baseline (events cross one
+    socket instead of two supervisor pipes).
   * **recovery latency, non-blocking** — kill -9 the straggler's worker
     mid-run and poll the supervisor's cumulative per-operator counters:
     time from SIGKILL until OP3 processes again (warm restart + rollback
     recovery), and how many events the source pushed *while OP3 was dead*
     (> 0 == the paper's non-blocking property across real processes).
+  * **back-pressure sweep** (``BENCH_transport.json``) — fast producer,
+    slow consumer, per (transport x credit window): throughput, the peak
+    number of events buffered in the supervisor, and the supervisor's
+    peak RSS growth.  The point of credit-based flow control: a slow
+    consumer bounds sender/supervisor memory at the window instead of
+    growing the supervisor without bound (the pre-transport-layer
+    ``force_put`` behaviour).
 
 Run:  PYTHONPATH=src:. python benchmarks/process_mode.py [--quick]
                        [--json BENCH_process.json]
+                       [--transport-json BENCH_transport.json]
 CSV:  name,us_per_call,derived
 """
 from __future__ import annotations
@@ -24,10 +35,12 @@ import argparse
 import json
 import os
 import tempfile
+import threading
 import time
 
 from benchmarks.uc1 import build_uc1
-from repro.core import Engine
+from repro.core import (Engine, GeneratorSource, MapOperator, Pipeline,
+                        ReadSource, TerminalSink)
 from repro.core.logstore import build_store
 
 
@@ -39,8 +52,10 @@ def _mk_store(spec: str, tag: str):
     return build_store(spec, shards=4, batch_size=32, interval=0.005)
 
 
-def _run_once(build, mode: str, spec: str, timeout: float = 300.0) -> float:
-    eng = Engine(build(), mode=mode, store=_mk_store(spec, mode))
+def _run_once(build, mode: str, spec: str, timeout: float = 300.0,
+              transport=None) -> float:
+    eng = Engine(build(), mode=mode, store=_mk_store(spec, mode),
+                 transport=transport)
     t0 = time.time()
     eng.start()
     ok = eng.wait(timeout)
@@ -56,12 +71,15 @@ def normal_overhead(rows, *, n_events: int, repeats: int,
     build = build_uc1(n_events=n_events, rate_s=0.1, op2_pt=0.05,
                       op3_pt=0.5, op3_window=2, op4_window=10, kb=4.0)
     base = None
-    for mode in ("thread", "process"):
-        best = min(_run_once(build, mode, spec) for _ in range(repeats))
-        if mode == "thread":
+    for label, mode, transport in (("thread", "thread", None),
+                                   ("process_routed", "process", "routed"),
+                                   ("process_socket", "process", "socket")):
+        best = min(_run_once(build, mode, spec, transport=transport)
+                   for _ in range(repeats))
+        if base is None:
             base = best
         over = 100.0 * (best - base) / base if base else float("nan")
-        row = (f"process_mode/normal/{mode}", best * 1e6, round(over, 1))
+        row = (f"process_mode/normal/{label}", best * 1e6, round(over, 1))
         rows.append(row)
         print(f"{row[0]},{row[1]:.0f},{row[2]}", flush=True)
 
@@ -113,10 +131,81 @@ def recovery_latency(rows, *, n_events: int,
               flush=True)
 
 
+def _rss_kb() -> int:
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1])
+    except OSError:
+        pass
+    return 0
+
+
+def _bp_build(n: int, window: int, sink_pt: float):
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i, "pad": "x" * 512}
+                               for i in range(n)])))
+        p.add(lambda: MapOperator("map", fn=lambda b: b))
+        p.add(lambda: TerminalSink("sink", target=n, record=False,
+                                   processing_time=sink_pt))
+        p.connect("src", "out", "map", "in", capacity=window)
+        p.connect("map", "out", "sink", "in", capacity=window)
+        return p
+    return build
+
+
+def backpressure_sweep(rows, *, quick: bool = False,
+                       windows=(8, 64, 512)):
+    """Slow-consumer scenario per (transport x credit window): throughput,
+    peak events buffered in the supervisor, peak supervisor RSS growth."""
+    n = 400 if quick else 1500
+    sink_pt = 0.001
+    for transport in ("routed", "socket"):
+        for window in windows:
+            eng = Engine(_bp_build(n, window, sink_pt)(), mode="process",
+                         transport=transport, store="memory")
+            rss0 = _rss_kb()
+            peak = [0]
+            rss_peak = [rss0]
+            stop = threading.Event()
+
+            def watch():
+                while not stop.is_set():
+                    peak[0] = max(peak[0], max((len(c) for c in
+                                                eng.channels), default=0))
+                    rss_peak[0] = max(rss_peak[0], _rss_kb())
+                    time.sleep(0.002)
+            t0 = time.time()
+            eng.start()
+            wt = threading.Thread(target=watch, daemon=True)
+            wt.start()
+            ok = eng.wait(300.0)
+            dt = time.time() - t0
+            stop.set()
+            wt.join(timeout=5.0)
+            eng.stop()
+            if not ok:
+                raise TimeoutError(
+                    f"back-pressure run stalled ({transport}, w={window})")
+            for suffix, us, derived in (
+                    ("throughput", dt * 1e6 / n, round(n / dt, 1)),
+                    ("peak_sup_buffered", float(peak[0]), peak[0]),
+                    ("peak_sup_rss_delta_kb", float(rss_peak[0] - rss0),
+                     rss_peak[0] - rss0)):
+                name = f"transport/bp/{transport}/w{window}/{suffix}"
+                rows.append((name, us, derived))
+                print(f"{name},{us:.0f},{derived}", flush=True)
+
+
 def run(rows, repeats: int = 2, full: bool = False, quick: bool = False):
     n = 80 if quick else (400 if full else 200)
     normal_overhead(rows, n_events=n, repeats=1 if quick else repeats)
     recovery_latency(rows, n_events=max(n, 160))
+    backpressure_sweep(rows, quick=quick or not full,
+                       windows=(8, 64) if quick else (8, 64, 512))
 
 
 def main():
@@ -127,6 +216,9 @@ def main():
     ap.add_argument("--repeats", type=int, default=2)
     ap.add_argument("--json", default=None,
                     help="also write rows as JSON (perf trajectory artifact)")
+    ap.add_argument("--transport-json", default=None,
+                    help="write the transport/back-pressure rows as JSON "
+                         "(BENCH_transport.json artifact)")
     args = ap.parse_args()
     rows = []
     print("name,us_per_call,derived")
@@ -136,6 +228,13 @@ def main():
             json.dump([{"name": n, "us_per_call": u, "derived": d}
                        for n, u, d in rows], f, indent=2)
         print(f"# wrote {args.json}", flush=True)
+    if args.transport_json:
+        tr = [r for r in rows if r[0].startswith("transport/")
+              or "/normal/process_" in r[0]]
+        with open(args.transport_json, "w") as f:
+            json.dump([{"name": n, "us_per_call": u, "derived": d}
+                       for n, u, d in tr], f, indent=2)
+        print(f"# wrote {args.transport_json}", flush=True)
 
 
 if __name__ == "__main__":

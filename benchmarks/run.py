@@ -18,9 +18,14 @@ import json
 
 
 def main():
+    import inspect
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale repeats + the largest configurations")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale for the sections that support it "
+                         "(process/transport)")
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--only", default=None,
                     help="comma list: uc1,uc2,uc3,lineage,process,roofline")
@@ -28,7 +33,7 @@ def main():
                     help="also write the collected rows as JSON "
                          "(per-commit perf-trajectory artifact)")
     args = ap.parse_args()
-    repeats = args.repeats or (3 if args.full else 2)
+    repeats = args.repeats or (3 if args.full else (1 if args.quick else 2))
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (lineage_overhead, process_mode, roofline, uc1,
@@ -40,8 +45,11 @@ def main():
                       ("process", process_mode), ("roofline", roofline)):
         if only and name not in only:
             continue
+        kwargs = {"repeats": repeats, "full": args.full}
+        if "quick" in inspect.signature(mod.run).parameters:
+            kwargs["quick"] = args.quick
         try:
-            mod.run(rows, repeats=repeats, full=args.full)
+            mod.run(rows, **kwargs)
         except Exception as e:   # keep the suite going; record the failure
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             rows.append((f"{name}/ERROR", 0.0, f"{type(e).__name__}"))

@@ -13,10 +13,14 @@ Three execution modes:
     (used by the benchmarks that reproduce Sec. 9).
   * ``mode="step"``    — deterministic single-threaded round-robin (used by
     the hypothesis property tests; failures injected at exact points).
-  * ``mode="process"`` — one forked OS process per group behind a
-    pipe-based transport, all workers sharing this process's log store;
-    crash = real ``kill -9`` and only the failed group warm-restarts
-    (``repro.core.procmode``).
+  * ``mode="process"`` — one forked OS process per group, all workers
+    sharing this process's log store; crash = real ``kill -9`` and only
+    the failed group warm-restarts (``repro.core.procmode``).  The event
+    transport is selectable (``transport="routed"`` keeps every
+    authoritative buffer in the supervisor; ``transport="socket"`` runs
+    direct worker-to-worker socket channels) — see
+    :mod:`repro.core.transport`.  All transports enforce credit-based
+    back-pressure at the channel capacity.
 """
 from __future__ import annotations
 
@@ -26,7 +30,8 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.builtin import GeneratorSource
-from repro.core.channels import Channel
+from repro.core.transport import Channel
+from repro.core.transport.base import process_transport_names
 from repro.core.lineage import LineageScope, enabled_ports
 from repro.core.logstore import LogBackend, MemoryLogStore, build_store
 from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
@@ -102,6 +107,7 @@ class Engine:
                  lineage_scopes: Sequence[LineageScope] = (),
                  injector: Optional[FailureInjector] = None,
                  mode: str = "thread",
+                 transport: Optional[str] = None,
                  restart_delay: float = 0.05,
                  replay_ops: Sequence[str] = (),
                  abs_options: Optional[dict] = None,
@@ -109,9 +115,23 @@ class Engine:
         """``store`` is any :class:`LogBackend` (or a ``build_store`` spec
         string like ``"memory+sharded+group"``). ``resume=True`` starts
         every operator in state "restarted" — warm restart of a whole
-        pipeline against a recovered store (full-process crash)."""
+        pipeline against a recovered store (full-process crash).
+        ``transport`` selects the process-mode channel implementation
+        (``"routed"``/``"socket"``); thread and step mode always use the
+        in-memory ``"local"`` transport."""
         self.pipeline = pipeline
         self._resume = resume
+        if mode == "process":
+            self.transport = transport or "routed"
+            if self.transport not in process_transport_names():
+                raise ValueError(
+                    f"unknown process transport {self.transport!r} "
+                    f"(have {process_transport_names()})")
+        else:
+            if transport not in (None, "local"):
+                raise ValueError(
+                    f"transport={transport!r} requires mode='process'")
+            self.transport = "local"
         if isinstance(store, str):
             store = build_store(store)
         self.store: LogBackend = store or MemoryLogStore()
@@ -142,7 +162,11 @@ class Engine:
     # ------------------------------------------------------------------
     def _build(self, first: bool, only_group: Optional[str] = None,
                restarted: bool = False):
-        cap_override = None if self.mode == "thread" else 1_000_000
+        # step mode is single-threaded: a blocking put would deadlock the
+        # deterministic round-robin, so its channels are effectively
+        # unbounded. Thread and process mode run the configured capacity —
+        # the credit window of the transport layer.
+        cap_override = 1_000_000 if self.mode == "step" else None
         if first:
             for (s, sp, d, dp, cap) in self.pipeline.connections:
                 self.channels.append(Channel(s, sp, d, dp,

@@ -30,6 +30,10 @@ def _paths(pipeline, start: Tuple[str, str], target: Tuple[str, str]
     out_ports: Dict[str, Set[str]] = defaultdict(set)
     for (s, sp), _ in edges:
         out_ports[s].add(sp)
+    # the target may be an output port with no outgoing connection (the
+    # terminal operator of the scope) — the connection graph alone never
+    # mentions it, so declare it or the walk cannot enter it
+    out_ports[target[0]].add(target[1])
     results = []
 
     def walk(port, path):

@@ -7,26 +7,27 @@ warm-restarts only that group while every other worker keeps processing
 (the paper's non-blocking recovery property, across actual process
 boundaries).
 
-Topology::
+Topology (transport-dependent; see :mod:`repro.core.transport`)::
 
     parent (supervisor)                      worker (one per group)
     ───────────────────                      ──────────────────────
-    authoritative Channels  ◄─ transport ─►  WorkerChannel replicas
+    SupervisorTransport     ◄─ tr pipe ──►   WorkerTransport
+      routed: authoritative Channels           routed: replicas + credits
+      socket: address broker + probes          socket: sender-held buffers,
+                                                direct worker↔worker sockets
     LogBackend (the one     ◄─── RPC ─────►  StoreClient / ExternalClient /
     sqlite-family store),                    InjectorClient / ScratchClient
     ExternalSystem,
     FailureInjector,
-    supervisor + router threads              single-threaded protocol loop
+    supervisor + router threads              protocol loop (+ socket threads)
 
-* **Transport** — every channel's authoritative buffer lives in the
-  parent (the reliable piece, like the in-house TCP transport of the
-  paper's implementation): events survive any worker death.  The parent
-  streams a channel's unprocessed suffix to the receiving worker in FIFO
-  order; the worker's replica forwards ``ack``/``defer_ack``/
-  ``release_ack`` back, so per-port FIFO + ack + durability-watermark
-  semantics are exactly the thread-mode ones.  On a worker restart the
-  parent rewinds the deferred-ack cursor (``reset_pending``) and
-  redelivers; obsolete filters drop the already-recovered prefix.
+* **Transport** — behind the formal interface in
+  :mod:`repro.core.transport.base`.  ``routed`` keeps every authoritative
+  buffer in the supervisor and pumps deliveries over pipes; ``socket``
+  moves the reliable buffer to the sender-side worker and events bypass
+  the supervisor entirely.  Both enforce credit-based back-pressure at
+  the channel capacity and both preserve per-port FIFO + ack +
+  durability-watermark semantics exactly as in thread mode.
 * **Log store** — all workers share the parent's single store through a
   synchronous RPC proxy (:class:`StoreClient`).  Transaction ops are plain
   tuples, so they cross the pipe verbatim; ``TxnAborted`` stays
@@ -36,11 +37,10 @@ Topology::
   plan must outlive worker restarts); a firing plan entry answers
   ``("crash",)`` and the worker SIGKILLs itself: every injected failure in
   process mode is a genuine ``kill -9``, not an exception.
-* **Done detection** — workers report idle states (received-count,
-  sources exhausted, deferred effects, pending work); the supervisor
-  declares completion only when every worker's report is consistent with
-  its own delivery counters and every authoritative channel is empty,
-  force-draining the durability watermark at end of stream first.
+* **Done detection** — delegated to the transport: the routed supervisor
+  cross-checks worker idle reports against its own delivery counters; the
+  socket supervisor runs a two-wave activity probe (no central counters
+  exist by design).
 
 Workers are forked (``multiprocessing`` "fork" context), so operator
 factories need not be picklable; only :class:`~repro.core.events.Event`
@@ -56,10 +56,11 @@ import time
 from typing import Any, Dict, List, Optional
 
 from repro.core.builtin import GeneratorSource, ScratchStore
-from repro.core.channels import Channel
 from repro.core.logstore.base import LogBackend, TxnAborted
 from repro.core.operator import OperatorRuntime, SimulatedCrash
 from repro.core.recovery import recover_operator
+from repro.core.transport.base import (make_supervisor_transport,
+                                       make_worker_transport)
 
 _CTX = multiprocessing.get_context("fork")
 
@@ -75,7 +76,8 @@ MAX_RESTARTS_PER_GROUP = 50
 
 class _Rpc:
     """Synchronous request/response over the worker's RPC pipe. The worker
-    is single-threaded, so one outstanding request at a time by design."""
+    runs one protocol thread, so one outstanding request at a time by
+    design (socket reader threads never touch the store)."""
 
     def __init__(self, conn):
         self.conn = conn
@@ -216,62 +218,20 @@ class InjectorClient:
         self.rpc.call("inj", op_id, point)
 
 
-class WorkerChannel(Channel):
-    """Worker-local replica of one authoritative parent channel. The
-    parent streams deliveries into ``deliver``; consumption verbs forward
-    so the authoritative buffer (which survives this process) tracks the
-    replica exactly."""
-
-    def __init__(self, tr_conn, send_op, send_port, rec_op, rec_port):
-        super().__init__(send_op, send_port, rec_op, rec_port,
-                         capacity=1_000_000)
-        self._tr = tr_conn
-
-    def deliver(self, ev):
-        with self._cv:
-            self._buf.append(ev)
-
-    def put(self, ev, stop_flag=None, timeout: float = 0.05) -> bool:
-        self._tr.send(("put", self.name, ev))
-        return True
-
-    def ack(self):
-        ev = super().ack()
-        if ev is not None:
-            self._tr.send(("ack", self.name))
-        return ev
-
-    def defer_ack(self):
-        with self._cv:
-            if len(self._buf) > self._pending:
-                self._pending += 1
-                self._tr.send(("defer", self.name))
-
-    def release_ack(self):
-        ev = super().release_ack()
-        if ev is not None:
-            self._tr.send(("release", self.name))
-        return ev
-
-
 def _worker_main(engine, group: str, rpc_conn, tr_conn, recover: bool):
     """The forked worker: rebuild the group's operators against proxy
     store/external/channels, recover if asked, then run the thread-mode
-    group loop with deliveries arriving over the transport pipe."""
+    group loop with deliveries arriving over the transport."""
     rpc = _Rpc(rpc_conn)
     store = StoreClient(rpc)
     external = ExternalClient(rpc)
     injector = InjectorClient(rpc)
     ScratchStore.backend = ScratchClient(rpc)
 
+    wt = make_worker_transport(engine.transport, engine, group, tr_conn)
     pipeline = engine.pipeline
     group_ops = [o for o, g in pipeline.groups.items() if g == group]
-    channels: Dict[str, WorkerChannel] = {}
-    for ch in engine.channels:
-        if ch.rec_op in group_ops or ch.send_op in group_ops:
-            channels[ch.name] = WorkerChannel(tr_conn, ch.send_op,
-                                              ch.send_port, ch.rec_op,
-                                              ch.rec_port)
+    channels = wt.channels
     ops, runtimes = {}, {}
     for op_id in group_ops:
         op = pipeline.factories[op_id]()
@@ -288,6 +248,7 @@ def _worker_main(engine, group: str, rpc_conn, tr_conn, recover: bool):
         runtimes[op_id] = OperatorRuntime(
             op, store, lineage_in=lin_in, lineage_out=lin_out,
             external=external, crash_point=injector,
+            stop_flag=lambda: wt.stopped,
             replay_mode=op_id in engine.replay_ops,
             keep_state_history=bool(lin_out))
 
@@ -304,10 +265,7 @@ def _worker_main(engine, group: str, rpc_conn, tr_conn, recover: bool):
                              replay_pred_ports=replay_pred_ports)
 
     sources = [op for op in ops.values() if isinstance(op, GeneratorSource)]
-    n_received = 0
-    last_idle: Optional[dict] = None
     last_stats = 0.0
-    force = False
 
     def step_op(op) -> bool:
         if isinstance(op, GeneratorSource):
@@ -324,52 +282,41 @@ def _worker_main(engine, group: str, rpc_conn, tr_conn, recover: bool):
         return progressed
 
     def send_stats():
-        tr_conn.send(("stats", {o: dict(runtimes[o].stats)
-                                for o in group_ops}))
+        wt.send_stats({o: dict(runtimes[o].stats) for o in group_ops})
 
     while True:
-        while tr_conn.poll(0):
-            msg = tr_conn.recv()
-            kind = msg[0]
-            if kind == "ev":
-                ch = channels.get(msg[1])
-                if ch is not None:
-                    ch.deliver(msg[2])
-                n_received += 1
-            elif kind == "force":
-                force = True
-            elif kind == "stop":
-                return
+        wt.pump(0)
+        if wt.stopped:
+            return
 
+        wt.begin_step()
         progressed = False
         for op_id in group_ops:
             progressed |= step_op(ops[op_id])
             progressed |= runtimes[op_id].drain_durable()
-        if not progressed and force:
+        if not progressed and wt.take_force():
             # end of stream (per the supervisor): push the durability
             # watermark so held acks/external writes release
             for op_id in group_ops:
                 progressed |= runtimes[op_id].drain_durable(force=True)
-            force = False
 
-        now = time.time()
-        if progressed:
-            last_idle = None
-            if now - last_stats >= 0.05:
-                send_stats()
-                last_stats = now
-            continue
         state = {
-            "n_received": n_received,
             "exhausted": all(s.exhausted for s in sources),
             "deferred": sum(len(runtimes[o]._deferred) for o in group_ops),
             "pending": any(ops[o].has_pending() for o in group_ops),
         }
-        if state != last_idle:
+        now = time.time()
+        if progressed:
+            wt.boundary(state)
+            if now - last_stats >= 0.05:
+                send_stats()
+                last_stats = now
+            continue
+        if now - last_stats >= 0.05:
             send_stats()
-            tr_conn.send(("idle", state))
-            last_idle = state
-        tr_conn.poll(0.005)
+            last_stats = now
+        wt.report_idle(state)
+        wt.pump(0.005)
 
 
 def _worker_entry(engine, group, rpc_conn, tr_conn, recover):
@@ -402,13 +349,21 @@ class _WorkerHandle:
         self.pump_lock = threading.Lock()
         self.sent = 0                  # "ev" deliveries to this incarnation
         self.last_idle: Optional[dict] = None
+        self.probe: Optional[Any] = None   # (round, snapshot) — socket
         self.alive = False
         self.stopping = False
         self.restarts = 0              # total for this group (never reset)
+        self.incarnation = 0           # bumped on every (re)spawn
 
-    def send(self, msg) -> bool:
+    def send(self, msg, incarnation: Optional[int] = None) -> bool:
+        """Send to the worker. ``incarnation`` pins the message to the
+        incarnation it was computed against: a credit grant derived from
+        a buffer pop must not land on a fresh incarnation whose initial
+        window already accounts for that pop (double grant)."""
         with self.send_lock:
             if not self.alive:
+                return False
+            if incarnation is not None and incarnation != self.incarnation:
                 return False
             try:
                 self.tr_conn.send(msg)
@@ -418,17 +373,16 @@ class _WorkerHandle:
 
 
 class ProcessEngineDriver:
-    """Supervisor + router: spawns one forked worker per operator group,
-    owns the authoritative channels/store/external/injector, detects
-    worker death (SIGKILL included) and warm-restarts only the failed
-    group while the rest keep processing."""
+    """Supervisor: spawns one forked worker per operator group, owns the
+    shared store/external/injector and the transport's supervisor half,
+    detects worker death (SIGKILL included) and warm-restarts only the
+    failed group while the rest keep processing."""
 
     def __init__(self, engine):
         self.e = engine
         self.lock = threading.RLock()
         self.workers: Dict[str, _WorkerHandle] = {}
-        self.ch_by_name: Dict[str, Channel] = {}
-        self.inflight: Dict[str, int] = {}       # channel -> delivered, unconsumed
+        self.ch_by_name: Dict[str, Any] = {}
         self._stop = threading.Event()
         self._failed = threading.Event()
         self._supervisor: Optional[threading.Thread] = None
@@ -437,7 +391,9 @@ class ProcessEngineDriver:
         # _op_stats_base when the incarnation dies)
         self._op_stats_base: Dict[str, Dict[str, int]] = {}
         self._op_stats_live: Dict[str, Dict[str, int]] = {}
-        self.refresh_channels()
+        with self.lock:
+            self.ch_by_name = {ch.name: ch for ch in self.e.channels}
+        self.transport = make_supervisor_transport(engine.transport, self)
 
     # ---- channel bookkeeping --------------------------------------------
     def refresh_channels(self):
@@ -445,53 +401,17 @@ class ProcessEngineDriver:
         and after dynamic-scaling topology changes."""
         with self.lock:
             self.ch_by_name = {ch.name: ch for ch in self.e.channels}
-            for name in self.ch_by_name:
-                self.inflight.setdefault(name, 0)
-            for name in list(self.inflight):
-                if name not in self.ch_by_name:
-                    del self.inflight[name]
+        self.transport.sync_channels()
 
-    def _pump(self, name: str):
-        """Stream the channel's undelivered suffix to its receiving
-        worker. Cursor reads/updates happen under ``self.lock``; the
-        (possibly blocking) pipe send happens OUTSIDE it, under the
-        worker's ``pump_lock``, so one slow worker's full pipe never
-        stalls routing for the other workers or the supervisor."""
-        with self.lock:
-            ch = self.ch_by_name.get(name)
-            if ch is None:
-                return
-            h = self.workers.get(self.e.pipeline.groups.get(ch.rec_op))
-        if h is None:
-            return
-        with h.pump_lock:
-            while True:
-                with self.lock:
-                    if self.ch_by_name.get(name) is not ch or not h.alive:
-                        return
-                    ev = ch.peek_index(self.inflight.get(name, 0))
-                if ev is None:
-                    return
-                if not h.send(("ev", name, ev)):
-                    return
-                with self.lock:
-                    self.inflight[name] += 1
-                    h.sent += 1
-
-    def _pump_group(self, group: str):
-        with self.lock:
-            names = [name for name, ch in self.ch_by_name.items()
-                     if self.e.pipeline.groups.get(ch.rec_op) == group]
-        for name in names:
-            self._pump(name)
+    def record_stats(self, group: str, stats: Dict[str, dict]):
+        """Live per-operator counters from a worker (under self.lock)."""
+        self._op_stats_live[group] = {
+            op: s.get("events_in", 0) + s.get("events_out", 0)
+            for op, s in stats.items()}
 
     def pump_all(self):
-        """Deliver any undelivered suffix on every channel (used after
-        dynamic-scaling rewires put events in from the parent side)."""
-        with self.lock:
-            names = list(self.ch_by_name)
-        for name in names:
-            self._pump(name)
+        """Re-deliver/rebroadcast after a topology change (scaling)."""
+        self.transport.after_rewire()
 
     # ---- lifecycle -------------------------------------------------------
     def start(self):
@@ -509,9 +429,12 @@ class ProcessEngineDriver:
                 self.workers[group] = h
             rpc_parent, rpc_child = _CTX.Pipe()
             tr_parent, tr_child = _CTX.Pipe()
-            h.rpc_conn, h.tr_conn = rpc_parent, tr_parent
+            with h.send_lock:      # serialize with incarnation-pinned sends
+                h.rpc_conn, h.tr_conn = rpc_parent, tr_parent
+                h.incarnation += 1
             h.sent = 0
             h.last_idle = None
+            h.probe = None
             h.stopping = False
             proc = _CTX.Process(target=_worker_entry,
                                 args=(self.e, group, rpc_child, tr_child,
@@ -527,13 +450,20 @@ class ProcessEngineDriver:
                 target=self._rpc_loop, args=(h,), daemon=True,
                 name=f"rpc-{group}")
             h.tr_thread = threading.Thread(
-                target=self._tr_loop, args=(h,), daemon=True,
+                target=self.transport.tr_loop, args=(h,), daemon=True,
                 name=f"tr-{group}")
             h.rpc_thread.start()
             h.tr_thread.start()
-        self._pump_group(group)
+            # computed under the driver lock, in the same critical section
+            # as the incarnation bump: no concurrent ack-grant can observe
+            # a buffer state this initial window has not accounted for
+            initial_msgs = self.transport.on_spawn_locked(h)
+            inc = h.incarnation
+        for m in initial_msgs:         # pipe sends outside the driver lock
+            h.send(m, incarnation=inc)
+        self.transport.on_spawned(h)
 
-    # ---- parent router threads ------------------------------------------
+    # ---- parent RPC thread ----------------------------------------------
     def _rpc_loop(self, h: _WorkerHandle):
         store, ext = self.e.store, self.e.external
         conn = h.rpc_conn
@@ -570,55 +500,11 @@ class ProcessEngineDriver:
             except (BrokenPipeError, OSError):
                 return
 
-    def _tr_loop(self, h: _WorkerHandle):
-        conn = h.tr_conn
-        while True:
-            try:
-                msg = conn.recv()
-            except (EOFError, OSError):
-                return
-            kind = msg[0]
-            pump = None
-            with self.lock:
-                if kind == "put":
-                    _, name, ev = msg
-                    ch = self.ch_by_name.get(name)
-                    if ch is not None:
-                        # never drop: the sender already logged the event
-                        # as sent (process mode absorbs instead of
-                        # back-pressuring; see docs/process_mode.md)
-                        ch.force_put(ev)
-                        pump = name
-                elif kind == "ack":
-                    ch = self.ch_by_name.get(msg[1])
-                    if ch is not None:
-                        ch.ack()
-                        self.inflight[msg[1]] -= 1
-                elif kind == "defer":
-                    ch = self.ch_by_name.get(msg[1])
-                    if ch is not None:
-                        ch.defer_ack()
-                        self.inflight[msg[1]] -= 1
-                elif kind == "release":
-                    ch = self.ch_by_name.get(msg[1])
-                    if ch is not None:
-                        ch.release_ack()
-                elif kind == "idle":
-                    h.last_idle = msg[1]
-                elif kind == "stats":
-                    self._op_stats_live[h.group] = {
-                        op: s.get("events_in", 0) + s.get("events_out", 0)
-                        for op, s in msg[1].items()}
-            if pump is not None:
-                # pipe send outside self.lock: a full pipe toward a slow
-                # receiver must not stall this router thread's peers
-                self._pump(pump)
-
     # ---- supervision -----------------------------------------------------
     def _supervise(self):
         while not self._stop.is_set():
             self._check_deaths()
-            if self._check_done():
+            if not self._failed.is_set() and self.transport.check_done():
                 self.e._done.set()
                 return
             time.sleep(0.005)
@@ -636,9 +522,10 @@ class ProcessEngineDriver:
 
     def _on_worker_death(self, h: _WorkerHandle):
         """A worker died (SIGKILL, injected crash, or error). Volatile
-        state is gone; the store, the authoritative channels and the
-        external system live in this process — roll back per the log by
-        warm-restarting only this group (non-blocking for the others)."""
+        state is gone; the store and the external system live in this
+        process and buffered events are either held by the transport or
+        re-derivable from the log — roll back by warm-restarting only
+        this group (non-blocking for the others)."""
         group = h.group
         self.e.failures += 1
         self.e.group_state[group] = "dead"
@@ -647,62 +534,25 @@ class ProcessEngineDriver:
         for t in (h.rpc_thread, h.tr_thread):
             if t is not None:
                 t.join(timeout=5.0)
-        # hold the pump lock across the cursor rewind: a stale pump from
-        # the dead incarnation (blocked in a pipe send) must finish or fail
-        # before the cursors move, and cannot interleave with the fresh one
-        with h.pump_lock:
-            with self.lock:
-                base = self._op_stats_base.setdefault(group, {})
-                for op, n in self._op_stats_live.pop(group, {}).items():
-                    base[op] = base.get(op, 0) + n
-                h.restarts += 1
-                if h.restarts > MAX_RESTARTS_PER_GROUP:
-                    self.e.group_state[group] = "failed"
-                    self._failed.set()
-                    return
-                # unreleased deliveries become deliverable again; the
-                # restarted group's obsolete filters drop what recovery
-                # already covered
-                for name, ch in self.ch_by_name.items():
-                    if self.e.pipeline.groups.get(ch.rec_op) == group:
-                        ch.reset_pending()
-                        self.inflight[name] = 0
+        with self.lock:
+            base = self._op_stats_base.setdefault(group, {})
+            for op, n in self._op_stats_live.pop(group, {}).items():
+                base[op] = base.get(op, 0) + n
+            h.restarts += 1
+            if h.restarts > MAX_RESTARTS_PER_GROUP:
+                self.e.group_state[group] = "failed"
+                self._failed.set()
+                return
+        # transport-side rewind (routed: delivery cursors + inflight;
+        # socket: stale address/probe state) — takes its own locks so a
+        # stale pump of the dead incarnation finishes first
+        self.transport.before_respawn(h)
         if self.e.restart_delay > 0:
             time.sleep(self.e.restart_delay)       # warm pod restart
         if self._stop.is_set():
             return
         self.e.restarts += 1
         self._spawn(group, recover=True)
-
-    def _check_done(self) -> bool:
-        to_force: List[_WorkerHandle] = []
-        with self.lock:
-            if self._failed.is_set():
-                return False
-            deferred = 0
-            for h in self.workers.values():
-                if self.e.group_state.get(h.group) == "removed":
-                    continue
-                st = h.last_idle
-                if not h.alive or st is None \
-                        or st["n_received"] != h.sent \
-                        or not st["exhausted"] or st["pending"]:
-                    return False
-                deferred += st["deferred"]
-            if any(self.inflight.get(n, 0) for n in self.ch_by_name):
-                return False
-            if deferred == 0 and \
-                    all(len(ch) == 0 for ch in self.ch_by_name.values()):
-                return True
-            # quiescent but effects still gated on the durability
-            # watermark: force-drain (end of stream — batches cannot grow)
-            for h in self.workers.values():
-                if h.alive and (h.last_idle or {}).get("deferred"):
-                    h.last_idle = None
-                    to_force.append(h)
-        for h in to_force:       # pipe sends outside the driver lock
-            h.send(("force",))
-        return False
 
     # ---- external controls ----------------------------------------------
     def kill_group(self, group: str):
@@ -748,40 +598,17 @@ class ProcessEngineDriver:
         self.refresh_channels()
         if recover:
             h = self.workers.get(group)
-            locks = [h.pump_lock] if h is not None else []
-            for lk in locks:
-                lk.acquire()
-            try:
-                with self.lock:
-                    for name, ch in self.ch_by_name.items():
-                        if self.e.pipeline.groups.get(ch.rec_op) == group:
-                            ch.reset_pending()
-                            self.inflight[name] = 0
-            finally:
-                for lk in locks:
-                    lk.release()
+            if h is not None:
+                self.transport.before_respawn(h)
         self._spawn(group, recover=recover)
 
     def wait_group_drained(self, group: str, timeout: float = 5.0) -> bool:
         """Block until the group's worker has consumed every delivery and
-        all channels touching its operators are empty — dynamic scaling
-        must not delete a channel that still buffers a logged-and-sent
-        event (nobody would resend it once the replica is gone)."""
-        group_ops = set(self.e.group_ops(group))
-        deadline = time.time() + timeout
-        while time.time() < deadline:
-            with self.lock:
-                h = self.workers.get(group)
-                chans = [ch for ch in self.ch_by_name.values()
-                         if ch.rec_op in group_ops or ch.send_op in group_ops]
-                st = h.last_idle if h is not None else None
-                if h is not None and h.alive and st is not None \
-                        and st["n_received"] == h.sent \
-                        and st["deferred"] == 0 \
-                        and all(len(c) == 0 for c in chans):
-                    return True
-            time.sleep(0.005)
-        return False
+        no event involving its operators is buffered or in flight —
+        dynamic scaling must not delete a channel that still buffers a
+        logged-and-sent event (nobody would resend it once the endpoint
+        is gone)."""
+        return self.transport.wait_group_drained(group, timeout)
 
     def op_stats(self) -> Dict[str, int]:
         """Cumulative processed-event counters per operator across worker
@@ -822,6 +649,7 @@ class ProcessEngineDriver:
             h.alive = False
         if self._supervisor is not None:
             self._supervisor.join(timeout=5.0)
+        self.transport.request_stop()
         for h in handles:
             for conn in (h.rpc_conn, h.tr_conn):
                 try:

@@ -17,6 +17,17 @@ from their Input Sets (EVENT_LINEAGE gives output -> InSet). When a consumer
 of a replay operator fails, it marks the inputs it needs as "replay"; the
 engine restarts the replay predecessors in state "replay" and they
 regenerate those outputs (recursively up chains of replay operators).
+
+Transport interaction (repro.core.transport): step 1's resends flow
+through ordinary credit-gated ``put``s, so a recovering operator is
+back-pressured like any sender (it blocks, abortably, while a receiver's
+window is exhausted — deliveries and credit grants keep flowing
+underneath).  The transport itself rewinds the per-channel windows on a
+warm restart: the routed supervisor re-grants the fresh sender incarnation
+``capacity - len(buffer)`` credits and rewinds the receiver's delivery
+cursor; the socket transport rebuilds the sender-held buffer from the
+resends themselves, so the window resets implicitly and a SIGKILL'd
+receiver never strands a sender.
 """
 from __future__ import annotations
 

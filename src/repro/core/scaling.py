@@ -25,7 +25,7 @@ from __future__ import annotations
 import threading
 from typing import Any, Callable, List, Optional, Tuple
 
-from repro.core.channels import Channel
+from repro.core.transport import Channel
 from repro.core.events import UNDONE, Event
 from repro.core.operator import Operator, OperatorRuntime
 
@@ -243,7 +243,7 @@ class Controller:
         factory = self.replica_factory(replica_id)
         e.pipeline.factories[replica_id] = factory
         e.pipeline.groups[replica_id] = replica_id
-        cap = 1_000_000
+        cap = self.capacity          # the new channels' credit windows
         e.pipeline.connections.append(
             (self.disp_id, f"to_{replica_id}", replica_id, self.rp_in, cap))
         e.pipeline.connections.append(
@@ -284,15 +284,13 @@ class Controller:
             d_op._sync_ports()
 
         def send_to_channel(ev):
-            # straight into the supervisor's authoritative channels;
-            # force_put — the event is logged as sent, dropping it on a
-            # momentarily-full buffer would strand an UNDONE row forever
-            for ch in e.channels:
-                if ch.send_op == self.disp_id \
-                        and ch.send_port == ev.send_port \
-                        and ch.rec_op == ev.rec_op \
-                        and ch.rec_port == ev.rec_port:
-                    ch.force_put(ev)
+            # transport-dependent re-send: the routed supervisor absorbs
+            # the already-logged event into its authoritative buffer (the
+            # bounded reassignment set, not the stream, sizes this); the
+            # socket transport does nothing — the dispatcher is restarted
+            # with recover=True below and its log recovery resends every
+            # undone + unacknowledged output, reassigned ones included
+            drv.transport.reinject(ev)
 
         # Steps 1.b-1.d; the replica keeps RUNNING — the reassignment
         # transaction is mutually exclusive with its generation
@@ -336,7 +334,7 @@ class Controller:
             factory = self.replica_factory(replica_id)
             e.pipeline.factories[replica_id] = factory
             e.pipeline.groups[replica_id] = replica_id
-            cap = self.capacity if e.mode == "thread" else 1_000_000
+            cap = 1_000_000 if e.mode == "step" else self.capacity
             e.pipeline.connections.append(
                 (self.disp_id, f"to_{replica_id}", replica_id, self.rp_in, cap))
             e.pipeline.connections.append(

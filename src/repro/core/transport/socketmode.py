@@ -1,0 +1,633 @@
+"""The ``socket`` transport: direct worker-to-worker channels.
+
+Event payloads travel on point-to-point sockets between worker processes
+(`multiprocessing.connection` over ``AF_UNIX``, one duplex connection per
+sender-group -> receiver-group pair, channels multiplexed by name); the
+supervisor never touches an event.  It retains only the authoritative
+*recovery* view: the log.  The **sender-side worker holds the reliable
+buffer** for each of its channels, bounded at the credit window (= the
+channel capacity): ``put`` appends + transmits and blocks while the buffer
+is full; the receiver's ``ack``/``release`` frames returning over the
+socket are the credit grants that free a slot.  Deferred acks advance a
+pending cursor on the sender's buffer and keep holding their credit until
+``release`` (the durability-watermark rule), exactly like the local
+transport.
+
+Ack frames carry the event id and the sender matches them against its
+FIFO head, so a stale ack (a duplicate the receiver obsolete-filtered
+after a reconnect) can never pop the wrong event.
+
+Crash anatomy (why a lost buffer is safe):
+
+* **receiver dies** — the sender's buffer still holds every unreleased
+  event.  The supervisor respawns the receiver, which reports a fresh
+  listener address; the supervisor brokers it to the senders, which
+  reconnect, ``reset_pending`` and re-transmit the whole buffer suffix.
+  The receiver's obsolete filter (rebuilt from the log by Alg 9) drops
+  the already-recovered prefix.  Blocked puts wake as the fresh receiver
+  acks — a SIGKILL'd receiver never strands a sender.
+* **sender dies** — its buffer is gone, but every buffered event was
+  logged before send (Alg 3 step 4 precedes step 5), so the respawned
+  worker's recovery resends the undone + unacknowledged suffix from the
+  log (Alg 6/7) into a fresh buffer; receivers drop duplicates.  Events
+  the receiver had already processed are acknowledged *in the log*
+  (their InSet assignment) and are not resent.
+* **whole tree dies** — both cases at once, per group, on restart.
+
+Termination detection: with no central router the supervisor cannot count
+deliveries, so it runs a two-wave probe (Mattern-style).  Workers publish
+a snapshot only at main-loop iteration boundaries (never mid-transaction):
+monotonic activity counter, send-buffer occupancy, unprocessed receive
+backlog, deferred effects, exhaustion.  The run is complete when two
+consecutive probe waves return all-empty snapshots with unchanged
+activity counters from unchanged incarnations.  An event in flight always
+occupies its sender's buffer (it leaves only on an ack), so "all send
+buffers empty" covers the wire.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from multiprocessing import connection as mpc
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.transport.base import (SupervisorTransport, WorkerTransport,
+                                       register_transport)
+from repro.core.transport.local import Channel
+
+_FAMILY = "AF_UNIX" if hasattr(__import__("socket"), "AF_UNIX") else "AF_INET"
+
+
+class _Conn:
+    """A peer connection + send lock + liveness flag. Frames are sent
+    best-effort: a dead peer's frames are dropped (the log, not the wire,
+    is the recovery authority)."""
+
+    def __init__(self, conn):
+        self.conn = conn
+        self.lock = threading.Lock()
+        self.alive = True
+
+    def send(self, frame) -> bool:
+        with self.lock:
+            if not self.alive:
+                return False
+            try:
+                self.conn.send(frame)
+                return True
+            except (OSError, ValueError):
+                self.alive = False
+                return False
+
+    def close(self):
+        self.alive = False
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# worker-side channels
+# ---------------------------------------------------------------------------
+
+class SocketSendChannel(Channel):
+    """Sender-held reliable buffer, bounded at the credit window.  Only the
+    worker's main thread puts; reader threads apply remote acks.
+
+    FIFO discipline on reconnect: every frame for this channel is sent
+    under the buffer lock, and ``_entry`` (the live connection) becomes
+    visible only once ``resend_all`` has replayed the buffer on it.  A
+    put racing a reconnect therefore either lands before the replay
+    (covered by it, in order) or transmits after it — a fresh frame can
+    never overtake the re-transmission of older buffered events, which
+    would ratchet the receiver's obsolete filter past unprocessed ids
+    and silently drop them."""
+
+    def __init__(self, wt: "SocketWorker", send_op, send_port, rec_op,
+                 rec_port, capacity: int):
+        super().__init__(send_op, send_port, rec_op, rec_port,
+                         capacity=capacity)
+        self._wt = wt
+        self._entry: Optional[_Conn] = None
+
+    def put(self, ev, stop_flag=None, timeout: float = 0.05) -> bool:
+        wt = self._wt
+        with self._cv:
+            while len(self._buf) >= self.capacity:
+                if wt.stopped or (stop_flag is not None and stop_flag()):
+                    return False
+                self._cv.wait(timeout)
+            if wt.stopped:
+                return False
+            self._buf.append(ev)
+            self.total_put += 1
+            entry = self._entry
+            if entry is not None and entry.alive:
+                entry.send(("ev", self.name, ev))
+        wt.bump()
+        return True
+
+    def resend_all(self, entry: _Conn):
+        """Fresh connection to a (possibly restarted) receiver: rewind the
+        deferred cursor, re-transmit the full buffer suffix in order, and
+        only then adopt the connection for subsequent puts."""
+        with self._cv:
+            self._pending = 0
+            for ev in self._buf:
+                entry.send(("ev", self.name, ev))
+            self._entry = entry
+
+    # -- remote consumption verbs (applied by reader threads) --------------
+    def remote_ack(self, event_id) -> None:
+        with self._cv:
+            if len(self._buf) > self._pending \
+                    and self._buf[self._pending].event_id == event_id:
+                self._buf.pop(self._pending)
+                self._cv.notify_all()
+        self._wt.bump()
+
+    def remote_defer(self, event_id) -> None:
+        with self._cv:
+            if len(self._buf) > self._pending \
+                    and self._buf[self._pending].event_id == event_id:
+                self._pending += 1
+        self._wt.bump()
+
+    def remote_release(self, event_id) -> None:
+        with self._cv:
+            if self._pending > 0 and self._buf \
+                    and self._buf[0].event_id == event_id:
+                self._pending -= 1
+                self._buf.pop(0)
+                self._cv.notify_all()
+        self._wt.bump()
+
+
+class SocketRecvChannel(Channel):
+    """Receiver-side replica: reader threads deliver, the main loop
+    consumes, and each consumption verb returns a credit to the sender as
+    an id-matched ack frame."""
+
+    def __init__(self, wt: "SocketWorker", send_op, send_port, rec_op,
+                 rec_port):
+        super().__init__(send_op, send_port, rec_op, rec_port,
+                         capacity=1_000_000)
+        self._wt = wt
+
+    def deliver(self, ev):
+        with self._cv:
+            self._buf.append(ev)
+        self._wt.bump()
+
+    def put(self, ev, stop_flag=None, timeout: float = 0.05) -> bool:
+        raise RuntimeError(f"{self.name}: put on the receiving endpoint")
+
+    def _frame(self, kind: str, ev):
+        entry = self._wt.conn_in_for(self.name)
+        if entry is not None:
+            entry.send((kind, self.name, ev.event_id))
+
+    def ack(self):
+        ev = super().ack()
+        if ev is not None:
+            self._frame("ack", ev)
+            self._wt.bump()
+        return ev
+
+    def defer_ack(self):
+        with self._cv:
+            if len(self._buf) > self._pending:
+                ev = self._buf[self._pending]
+                self._pending += 1
+            else:
+                ev = None
+        if ev is not None:
+            self._frame("defer", ev)
+            self._wt.bump()
+
+    def release_ack(self):
+        ev = super().release_ack()
+        if ev is not None:
+            self._frame("release", ev)
+            self._wt.bump()
+        return ev
+
+
+# ---------------------------------------------------------------------------
+# worker transport
+# ---------------------------------------------------------------------------
+
+class SocketWorker(WorkerTransport):
+    def __init__(self, engine, group: str, tr_conn):
+        self.group = group
+        self.conn = tr_conn
+        self.stopped = False
+        self._force = False
+        self._reg = threading.Lock()       # conn registries + peer addrs
+        self._tr_send_lock = threading.Lock()
+        self._act_lock = threading.Lock()
+        self.activity = 0
+        self._snap_lock = threading.Lock()
+        # True while the main loop is inside an iteration (or still in
+        # recovery): consumption verbs may have run with their effects
+        # (generation, write actions) still pending in-step, invisible to
+        # any buffer — probes must treat the worker as busy
+        self._stepping = True
+        # until the first boundary the worker counts as busy (recovery)
+        self._snap = {"exhausted": False, "pending": True, "deferred": 0}
+        self.channels: Dict[str, Channel] = {}
+        self._send_chs: Dict[str, SocketSendChannel] = {}
+        self._recv_chs: Dict[str, SocketRecvChannel] = {}
+        self._local_chs: Dict[str, Channel] = {}
+        self._peer_of: Dict[str, str] = {}         # channel -> peer group
+        groups = engine.pipeline.groups
+        for ch in engine.channels:
+            send_in = groups.get(ch.send_op) == group
+            rec_in = groups.get(ch.rec_op) == group
+            if send_in and rec_in:
+                c = Channel(ch.send_op, ch.send_port, ch.rec_op, ch.rec_port,
+                            capacity=1_000_000)
+                self._local_chs[ch.name] = c
+            elif send_in:
+                c = SocketSendChannel(self, ch.send_op, ch.send_port,
+                                      ch.rec_op, ch.rec_port, ch.capacity)
+                self._send_chs[ch.name] = c
+                self._peer_of[ch.name] = groups.get(ch.rec_op)
+            elif rec_in:
+                c = SocketRecvChannel(self, ch.send_op, ch.send_port,
+                                      ch.rec_op, ch.rec_port)
+                self._recv_chs[ch.name] = c
+                self._peer_of[ch.name] = groups.get(ch.send_op)
+            else:
+                continue
+            self.channels[ch.name] = c
+        self._out: Dict[str, _Conn] = {}           # peer group -> conn
+        self._in: Dict[str, _Conn] = {}
+        self._peer_addr: Dict[str, Tuple] = {}     # peer -> (addr, gen)
+        self.listener = mpc.Listener(family=_FAMILY)
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name=f"sock-accept-{group}").start()
+        threading.Thread(target=self._control_loop, daemon=True,
+                         name=f"sock-ctl-{group}").start()
+        self._tr_send(("addr", self.listener.address))
+
+    # -- plumbing ----------------------------------------------------------
+    def bump(self):
+        with self._act_lock:
+            self.activity += 1
+
+    def _tr_send(self, msg):
+        with self._tr_send_lock:
+            try:
+                self.conn.send(msg)
+            except (OSError, ValueError):
+                pass                      # supervisor gone: we exit soon
+
+    def conn_in_for(self, ch_name: str) -> Optional[_Conn]:
+        with self._reg:
+            e = self._in.get(self._peer_of.get(ch_name))
+        return e if e is not None and e.alive else None
+
+    # -- threads -----------------------------------------------------------
+    def _accept_loop(self):
+        while not self.stopped:
+            try:
+                c = self.listener.accept()
+                hello = c.recv()
+            except (OSError, EOFError):
+                return                    # listener closed (stop)
+            if not (isinstance(hello, tuple) and hello[0] == "hello"):
+                c.close()
+                continue
+            entry = _Conn(c)
+            with self._reg:
+                self._in[hello[1]] = entry
+            threading.Thread(target=self._reader, args=(entry,),
+                             daemon=True).start()
+
+    def _reader(self, entry: _Conn):
+        while True:
+            try:
+                frame = entry.conn.recv()
+            except (EOFError, OSError):
+                entry.alive = False
+                return
+            kind = frame[0]
+            if kind == "ev":
+                ch = self._recv_chs.get(frame[1])
+                if ch is not None:
+                    ch.deliver(frame[2])
+            elif kind == "ack":
+                ch = self._send_chs.get(frame[1])
+                if ch is not None:
+                    ch.remote_ack(frame[2])
+            elif kind == "defer":
+                ch = self._send_chs.get(frame[1])
+                if ch is not None:
+                    ch.remote_defer(frame[2])
+            elif kind == "release":
+                ch = self._send_chs.get(frame[1])
+                if ch is not None:
+                    ch.remote_release(frame[2])
+
+    def _control_loop(self):
+        while True:
+            try:
+                msg = self.conn.recv()
+            except (EOFError, OSError):
+                self.stopped = True
+                return
+            kind = msg[0]
+            if kind == "peer":
+                self._connect(msg[1], msg[2], msg[3])
+            elif kind == "probe":
+                self._tr_send(("snap", msg[1], self._probe_snapshot()))
+            elif kind == "force":
+                self._force = True
+            elif kind == "stop":
+                self.stopped = True
+                try:
+                    self.listener.close()
+                except OSError:
+                    pass
+                return
+
+    def _connect(self, peer: str, addr, gen: int):
+        """(Re)connect to a peer's fresh listener and re-transmit the
+        reliable buffers of every channel toward it."""
+        with self._reg:
+            cur = self._peer_addr.get(peer)
+            e = self._out.get(peer)
+            if cur == (addr, gen) and e is not None and e.alive:
+                return                     # duplicate broadcast
+            self._peer_addr[peer] = (addr, gen)
+        try:
+            c = mpc.Client(addr)
+            c.send(("hello", self.group))
+        except (OSError, EOFError):
+            return      # peer died again; a newer broadcast will follow
+        entry = _Conn(c)
+        with self._reg:
+            old, self._out[peer] = self._out.get(peer), entry
+        if old is not None:
+            old.alive = False
+        threading.Thread(target=self._reader, args=(entry,),
+                         daemon=True).start()
+        for name, ch in self._send_chs.items():
+            if self._peer_of.get(name) == peer:
+                ch.resend_all(entry)
+
+    def _probe_snapshot(self) -> dict:
+        """A probe reply. Buffer occupancy and the activity counter are
+        read LIVE (a cached boundary snapshot could make two probe waves
+        agree while work is in flight); ``exhausted``/``pending``/
+        ``deferred`` come from the last boundary — their transitions only
+        happen inside a step, and a step in progress is flagged by
+        ``stepping`` while a completed one bumped ``activity``."""
+        with self._snap_lock:
+            snap = dict(self._snap)
+        snap["outbuf"] = sum(len(c) for c in self._send_chs.values())
+        # deferred-ack events held in the send buffers: they keep outbuf
+        # non-zero until the durability watermark releases them, so the
+        # supervisor must distinguish them from genuinely in-flight work
+        # (quiescent-except-deferral triggers the force-drain)
+        snap["outheld"] = sum(c.held() for c in self._send_chs.values())
+        snap["inbuf"] = (
+            sum(c.unprocessed() for c in self._recv_chs.values())
+            + sum(c.unprocessed() for c in self._local_chs.values()))
+        with self._act_lock:
+            snap["activity"] = self.activity
+        snap["stepping"] = self._stepping
+        snap["pid"] = os.getpid()
+        return snap
+
+    # -- WorkerTransport ---------------------------------------------------
+    def pump(self, timeout: float) -> None:
+        if self.stopped:
+            return
+        if timeout:
+            time.sleep(timeout)        # deliveries/acks arrive on threads
+
+    def begin_step(self) -> None:
+        self._stepping = True
+
+    def take_force(self) -> bool:
+        f, self._force = self._force, False
+        return f
+
+    def boundary(self, state: dict) -> None:
+        snap = {
+            "exhausted": state["exhausted"],
+            "pending": state["pending"],
+            "deferred": state["deferred"],
+        }
+        with self._snap_lock:
+            self._snap = snap
+        self._stepping = False
+
+    def report_idle(self, state: dict) -> None:
+        self.boundary(state)
+
+    def send_stats(self, stats: dict) -> None:
+        self._tr_send(("stats", stats))
+
+
+# ---------------------------------------------------------------------------
+# supervisor side
+# ---------------------------------------------------------------------------
+
+class SocketSupervisor(SupervisorTransport):
+    name = "socket"
+
+    def __init__(self, driver):
+        super().__init__(driver)
+        self.addr: Dict[str, Tuple] = {}    # group -> (address, gen)
+        self._gen = 0
+        self._round = 0
+        self._sig: Optional[Dict[str, Tuple[int, int]]] = None
+
+    # -- address brokering -------------------------------------------------
+    def _peer_msgs_locked(self, group: str) -> List[Tuple]:
+        """(handle, msg) peer broadcasts involving ``group``'s channels:
+        tell ``group`` where its receivers listen, and tell the workers
+        that send into ``group`` about its (fresh) address."""
+        d = self.driver
+        groups = d.e.pipeline.groups
+        out = {}
+        for ch in d.ch_by_name.values():
+            sg, rg = groups.get(ch.send_op), groups.get(ch.rec_op)
+            if sg == rg:
+                continue
+            if sg == group and rg in self.addr:
+                out[(group, rg)] = (d.workers.get(group),
+                                    ("peer", rg) + self.addr[rg])
+            if rg == group and group in self.addr:
+                out[(sg, group)] = (d.workers.get(sg),
+                                    ("peer", group) + self.addr[group])
+        return [(h, m) for h, m in out.values() if h is not None]
+
+    def tr_loop(self, h):
+        d = self.driver
+        conn = h.tr_conn
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                return
+            kind = msg[0]
+            sends: List[Tuple] = []
+            with d.lock:
+                if kind == "addr":
+                    self._gen += 1
+                    self.addr[h.group] = (msg[1], self._gen)
+                    sends = self._peer_msgs_locked(h.group)
+                elif kind == "snap":
+                    h.probe = (msg[1], msg[2])
+                elif kind == "stats":
+                    d.record_stats(h.group, msg[1])
+            for ph, pm in sends:           # pipe sends outside driver.lock
+                ph.send(pm)
+
+    def on_spawned(self, h):
+        h.probe = None              # wait for the fresh incarnation
+
+    def before_respawn(self, h):
+        d = self.driver
+        with d.lock:
+            self.addr.pop(h.group, None)   # stale listener died with it
+            h.probe = None
+            self._sig = None
+
+    def after_rewire(self):
+        """Topology changed: re-broadcast every known address (workers
+        ignore duplicates; restarted parties re-enter via the addr flow)."""
+        d = self.driver
+        sends: List[Tuple] = []
+        with d.lock:
+            for g in list(self.addr):
+                sends.extend(self._peer_msgs_locked(g))
+        seen = set()
+        for ph, pm in sends:
+            key = (id(ph), pm[1])
+            if key not in seen:
+                seen.add(key)
+                ph.send(pm)
+
+    def reinject(self, ev):
+        """Alg 13 step 1.d: nothing to do — the dispatcher is restarted
+        with ``recover=True`` right after the reassignment transaction and
+        its log recovery resends every undone + unacknowledged output
+        (including the reassigned ones) through its fresh buffers."""
+
+    # -- termination (two-wave probe) --------------------------------------
+    def _quiescent_sig(self, handles) -> Optional[Dict]:
+        """None unless every worker's current-round snapshot is quiescent
+        (at most deferral effects outstanding); else the
+        {group: (pid, activity)} wave signature, or a ``__force__`` marker
+        when the only outstanding work is gated on the durability
+        watermark.  Deferred acks keep their events in the *sender's*
+        buffer (``outheld``), so 'all send buffers empty' would deadlock
+        against the end-of-stream force-drain — in-flight work is
+        ``outbuf - outheld``."""
+        sig = {}
+        gated = False
+        for h in handles:
+            p = getattr(h, "probe", None)
+            if p is None or p[0] != self._round:
+                return None                       # wave incomplete
+            s = p[1]
+            if h.proc is None or s["pid"] != h.proc.pid:
+                return None                       # stale incarnation
+            if not s["exhausted"] or s["pending"] or s["inbuf"] \
+                    or s["stepping"] or s["outbuf"] - s["outheld"]:
+                return None
+            if s["deferred"] or s["outheld"]:
+                gated = True
+            sig[h.group] = (s["pid"], s["activity"])
+        if gated:
+            # quiescent but effects still held by the durability
+            # watermark: force-drain every worker (end of stream —
+            # batches cannot grow, Alg 3 step 6 effects must release)
+            return {"__force__": list(handles)}
+        return sig
+
+    def check_done(self) -> bool:
+        d = self.driver
+        to_force: List = []
+        probes: List = []
+        done = False
+        with d.lock:
+            handles = [h for h in d.workers.values()
+                       if d.e.group_state.get(h.group) != "removed"]
+            if not handles or not all(h.alive for h in handles):
+                self._sig = None
+            else:
+                sig = self._quiescent_sig(handles)
+                if isinstance(sig, dict) and "__force__" in sig:
+                    to_force = sig["__force__"]
+                    self._sig = None
+                elif sig is not None:
+                    if self._sig == sig:
+                        done = True
+                    self._sig = sig
+                elif all(getattr(h, "probe", None) is not None
+                         and h.probe[0] == self._round for h in handles):
+                    self._sig = None              # wave complete, busy
+                if not done:
+                    # open (or repeat) a wave; repeats re-probe laggards
+                    incomplete = [h for h in handles
+                                  if getattr(h, "probe", None) is None
+                                  or h.probe[0] != self._round]
+                    if not incomplete:
+                        self._round += 1
+                        probes = list(handles)
+                    else:
+                        probes = incomplete
+        for h in to_force:
+            h.send(("force",))
+        r = self._round
+        for h in probes:
+            h.send(("probe", r))
+        return done
+
+    def wait_group_drained(self, group: str, timeout: float = 5.0) -> bool:
+        """Two stable all-empty snapshots from the group's worker: its
+        send buffers acked empty (outputs reached their receivers' logs),
+        no unprocessed backlog, no deferred effects."""
+        d = self.driver
+        deadline = time.time() + timeout
+        prev = None
+        while time.time() < deadline:
+            with d.lock:
+                h = d.workers.get(group)
+                if h is None or not h.alive:
+                    return False
+                self._round += 1
+                r = self._round
+            h.send(("probe", r))
+            t0 = time.time()
+            snap = None
+            while time.time() - t0 < 0.5:
+                with d.lock:
+                    p = getattr(h, "probe", None)
+                    if p is not None and p[0] == r:
+                        snap = p[1]
+                        break
+                time.sleep(0.002)
+            if snap is not None and not snap["outbuf"] and not snap["inbuf"] \
+                    and not snap["deferred"] and not snap["pending"] \
+                    and not snap["stepping"]:
+                if prev is not None and prev == snap["activity"]:
+                    return True
+                prev = snap["activity"]
+            else:
+                prev = None
+            time.sleep(0.005)
+        return False
+
+
+register_transport("socket", SocketSupervisor,
+                   lambda engine, group, conn: SocketWorker(engine, group,
+                                                            conn))

@@ -44,3 +44,37 @@ def store_spec(request):
     """Backend-stack spec string for ``tests.helpers.mk_store`` — the
     protocol must be oblivious to the storage stack behind LogBackend."""
     return request.param
+
+
+# ---------------------------------------------------------------------------
+# Process-transport matrix: process-mode tests run against the transports
+# selected by the LOGIO_TRANSPORT env var — the CI matrix axis, mirroring
+# LOGIO_STORE_SPEC:
+#
+#   unset / "all"     -> routed AND socket (full local default)
+#   "routed"          -> the supervisor-pumped pipe transport only
+#   "socket"          -> the direct worker<->worker socket transport only
+#   anything else     -> comma list of literal transport names
+# ---------------------------------------------------------------------------
+
+_TRANSPORT_SETS = {
+    "routed": ["routed"],
+    "socket": ["socket"],
+    "all": ["routed", "socket"],
+}
+
+
+def active_transports():
+    sel = os.environ.get("LOGIO_TRANSPORT", "").strip()
+    if not sel:
+        return _TRANSPORT_SETS["all"]
+    if sel in _TRANSPORT_SETS:
+        return _TRANSPORT_SETS[sel]
+    return [t.strip() for t in sel.split(",") if t.strip()]
+
+
+@pytest.fixture(params=active_transports())
+def proc_transport(request):
+    """Process-mode transport name — the recovery guarantees must be
+    oblivious to how events move between workers."""
+    return request.param

@@ -3,6 +3,7 @@ pipeline in process mode on a durable sqlite-family store until the parent
 test SIGKILLs this whole process tree mid-run.
 
 Usage: python tests/kill9_runner.py <store_spec> <db_path> <external_path>
+                                    [transport]
 (The parent sets PYTHONPATH so ``repro`` and ``tests`` import.)
 """
 import sys
@@ -14,13 +15,15 @@ from tests.helpers import FileExternalSystem, linear_pipeline
 
 def main():
     spec, db_path, ext_path = sys.argv[1], sys.argv[2], sys.argv[3]
+    transport = sys.argv[4] if len(sys.argv) > 4 else "routed"
     build, _expected = linear_pipeline(writes=1, rate=0.01)
     # no time-based flushing: whatever the watermark has not flushed when
     # the SIGKILL lands is a genuinely unflushed (or uncommitted) epoch
     store = build_store(spec, path=db_path, shards=3, batch_size=4,
                         interval=60.0)
     eng = Engine(build(), mode="process", store=store,
-                 external=FileExternalSystem(ext_path), restart_delay=0.01)
+                 external=FileExternalSystem(ext_path),
+                 transport=transport, restart_delay=0.01)
     eng.start()
     print("READY", flush=True)
     eng.wait(60)

@@ -1,7 +1,9 @@
 """Engine-internal unit tests: FailureInjector nth-crash semantics and the
 channel deferred-ack cursor used by group-commit pipelining."""
 
-from repro.core import Channel, Event, FailureInjector
+import pytest
+
+from repro.core import Channel, ChannelClosed, Event, FailureInjector
 from repro.core.operator import SimulatedCrash
 
 
@@ -87,6 +89,38 @@ def test_channel_reset_pending_redelivers():
     assert ch.peek().event_id == 1
     ch.reset_pending()                    # receiver restart
     assert ch.peek().event_id == 0        # unreleased events re-delivered
+
+
+def test_channel_rejects_puts_after_close():
+    """A put absorbed after close() would strand the event forever (nobody
+    drains a closed buffer): every put flavour must refuse."""
+    ch = _ch()
+    _put(ch, 0)
+    ch.close()
+    ev = Event(1, "A", "out", "B", "in", body=1)
+    assert ch.put(ev) is False
+    assert ch.try_put(ev) is False
+    with pytest.raises(ChannelClosed):
+        ch.force_put(ev)
+    assert len(ch) == 1                   # only the pre-close event remains
+
+
+def test_channel_blocked_put_aborts_on_close():
+    """A sender blocked on a full window wakes and aborts when the channel
+    closes (engine stop), instead of hanging forever."""
+    import threading
+    ch = Channel("A", "out", "B", "in", capacity=1)
+    _put(ch, 0)
+    result = []
+    t = threading.Thread(
+        target=lambda: result.append(
+            ch.put(Event(1, "A", "out", "B", "in", body=1), timeout=0.01)))
+    t.start()
+    t.join(timeout=0.2)
+    assert t.is_alive()                   # genuinely blocked on capacity
+    ch.close()
+    t.join(timeout=5.0)
+    assert result == [False]
 
 
 def test_abs_snapshots_through_log_backend():

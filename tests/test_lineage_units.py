@@ -1,0 +1,162 @@
+"""Unit tests for lineage path enumeration + capture-port derivation
+(Sec. 3.1): diamond topologies, reconvergent fan-out, multi-scope overlap,
+and terminal-operator targets (the case the connection graph alone cannot
+see — the walk must still find the scope's final output port)."""
+
+from repro.core import (Engine, GeneratorSource, LineageScope, MapOperator,
+                        Pipeline, ReadSource, SyncJoinOperator, TerminalSink,
+                        backward, enabled_ports, forward)
+from repro.core.lineage import _paths
+from tests.helpers import diamond_pipeline
+
+
+def _graph(connections):
+    p = Pipeline()
+    p.connections = [c + (64,) for c in connections]
+    return p
+
+
+DIAMOND = _graph([
+    ("src", "out", "fast", "in"),
+    ("src", "out", "slow", "in"),
+    ("fast", "out", "join", "in1"),
+    ("slow", "out", "join", "in2"),
+    ("join", "out", "sink", "in"),
+])
+
+
+def test_paths_diamond_enumerates_each_branch_once():
+    paths = _paths(DIAMOND, ("src", "out"), ("join", "out"))
+    assert len(paths) == 2
+    assert len({tuple(p) for p in paths}) == 2      # no double-enumeration
+    branches = {p[1][0] for p in paths}
+    assert branches == {"fast", "slow"}
+    for p in paths:
+        assert p[0] == ("src", "out") and p[-1] == ("join", "out")
+
+
+def test_paths_terminal_target_output_port():
+    """The scope target may be an output port with no outgoing connection
+    (the terminal operator of the scope); the walk must still reach it."""
+    g = _graph([
+        ("s", "out", "a", "in"),
+        ("s", "out", "b", "in"),
+        ("a", "out", "j", "i1"),
+        ("b", "out", "j", "i2"),
+        ("j", "out", "c", "in"),
+        ("j", "out", "d", "in"),
+        ("c", "out", "k", "i1"),
+        ("d", "out", "k", "i2"),
+    ])
+    paths = _paths(g, ("s", "out"), ("k", "out"))
+    # double diamond: 2 upstream branches x 2 downstream branches
+    assert len(paths) == 4
+    assert len({tuple(p) for p in paths}) == 4
+    ports = enabled_ports(g, [LineageScope(("s", "out"), ("k", "out"))])
+    assert ports["j"] == ({"i1", "i2"}, {"out"})
+    assert ports["k"] == ({"i1", "i2"}, {"out"})
+    assert ports["s"] == (set(), {"out"})
+
+
+def test_paths_reconvergent_fanout_distinct_ports():
+    g = _graph([
+        ("src", "out", "x", "in"),
+        ("x", "o1", "y", "a"),
+        ("x", "o2", "y", "b"),
+        ("y", "out", "z", "in"),
+    ])
+    paths = _paths(g, ("src", "out"), ("y", "out"))
+    assert len(paths) == 2
+    assert {p[2] for p in paths} == {("x", "o1"), ("x", "o2")}
+
+
+def test_paths_cycle_terminates_without_duplicates():
+    g = _graph([
+        ("s", "out", "x", "in"),
+        ("x", "out", "y", "in"),
+        ("y", "out", "x", "fb"),      # feedback edge
+        ("y", "out", "t", "in"),
+    ])
+    paths = _paths(g, ("s", "out"), ("t", "in"))
+    assert len(paths) == 1
+    assert len({tuple(p) for p in paths}) == 1
+
+
+def test_enabled_ports_diamond_covers_both_branches():
+    ports = enabled_ports(
+        DIAMOND, [LineageScope(("src", "out"), ("join", "out"))])
+    assert ports["fast"] == ({"in"}, {"out"})
+    assert ports["slow"] == ({"in"}, {"out"})
+    assert ports["join"] == ({"in1", "in2"}, {"out"})
+    assert ports["src"] == (set(), {"out"})
+    assert "sink" not in ports
+
+
+def test_enabled_ports_multi_scope_union():
+    """Overlapping scopes union their capture ports per operator."""
+    g = _graph([
+        ("s", "out", "a", "in"),
+        ("a", "out", "b", "in"),
+        ("b", "out", "c", "in"),
+    ])
+    scopes = [LineageScope(("s", "out"), ("a", "out")),
+              LineageScope(("a", "out"), ("c", "out"))]
+    ports = enabled_ports(g, scopes)
+    assert ports["a"] == ({"in"}, {"out"})
+    assert ports["b"] == ({"in"}, {"out"})
+    assert ports["c"] == ({"in"}, {"out"})
+    # 's' contributes only its start port (capture enabled as an output)
+    assert ports["s"] == (set(), {"out"})
+
+
+def test_enabled_ports_scope_start_equals_target():
+    g = _graph([("s", "out", "a", "in")])
+    ports = enabled_ports(g, [LineageScope(("s", "out"), ("s", "out"))])
+    assert ports["s"] == (set(), {"out"})
+
+
+def test_diamond_lineage_queries_end_to_end():
+    """Run the UC2-style diamond with a scope across both branches and
+    check backward/forward queries join over the join operator."""
+    build, expected = diamond_pipeline(n_events=12, n1=6, n2=3,
+                                      sink_target=2)
+    scopes = [LineageScope(("src", "out"), ("join", "out"))]
+    eng = Engine(build(), mode="step", lineage_scopes=scopes)
+    eng.start()
+    assert eng.run_to_completion()
+    eng.stop()
+    # backward from the first join output: contributors from BOTH branches
+    contributors = backward(eng.store, ("join", "out", 0))
+    ops = {c[0] for c in contributors}
+    assert {"fast", "slow", "src"} <= ops
+    # forward from the first source event reaches a join output
+    fwd = forward(eng.store, ("src", "out", 0), "fast")
+    assert any(k[0] == "join" for k in fwd)
+
+
+def test_multi_scope_diamond_engine_capture():
+    """Two scopes, one per branch, enable capture only on their paths."""
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(8)])))
+        p.add(lambda: MapOperator("fast", fn=lambda b: b))
+        p.add(lambda: MapOperator("slow", fn=lambda b: b))
+        p.add(lambda: SyncJoinOperator("join", 4, 4,
+                                       agg=lambda a, b: len(a) + len(b)))
+        p.add(lambda: TerminalSink("sink", target=2))
+        p.connect("src", "out", "fast", "in")
+        p.connect("src", "out", "slow", "in")
+        p.connect("fast", "out", "join", "in1")
+        p.connect("slow", "out", "join", "in2")
+        p.connect("join", "out", "sink", "in")
+        return p
+    pipe = build()
+    fast_only = enabled_ports(
+        pipe, [LineageScope(("fast", "out"), ("join", "out"))])
+    assert "slow" not in fast_only
+    assert fast_only["join"] == ({"in1"}, {"out"})
+    both = enabled_ports(
+        pipe, [LineageScope(("fast", "out"), ("join", "out")),
+               LineageScope(("slow", "out"), ("join", "out"))])
+    assert both["join"] == ({"in1", "in2"}, {"out"})

@@ -38,10 +38,11 @@ def _mk(spec):
     return mk_store(spec, shards=3, batch_size=4, interval=0.001)
 
 
-def _run(build, expected, spec, plan, timeout=60.0, require_fired=True):
+def _run(build, expected, spec, plan, timeout=60.0, require_fired=True,
+         transport="routed"):
     inj = FailureInjector(plan)
     eng = Engine(build(), mode="process", store=_mk(spec), injector=inj,
-                 restart_delay=0.02)
+                 transport=transport, restart_delay=0.02)
     eng.start()
     ok = eng.wait(timeout)
     eng.stop()
@@ -73,9 +74,10 @@ MATRIX = [
 
 @pytest.mark.parametrize("spec", SQLITE_SPECS)
 @pytest.mark.parametrize("op_id,point,nth", MATRIX)
-def test_sigkill_recovery_matrix(op_id, point, nth, spec):
+def test_sigkill_recovery_matrix(op_id, point, nth, spec, proc_transport):
     build, expected = linear_pipeline(writes=1)
-    _run(build, expected, spec, [(op_id, point, nth)])
+    _run(build, expected, spec, [(op_id, point, nth)],
+         transport=proc_transport)
 
 
 @pytest.mark.slow
@@ -86,36 +88,46 @@ def test_sigkill_recovery_matrix(op_id, point, nth, spec):
                                    "post_ack_log", "pre_log", "post_log",
                                    "post_send", "pre_write",
                                    "post_write_pre_done"])
-def test_sigkill_recovery_matrix_full(op_id, point, spec):
+def test_sigkill_recovery_matrix_full(op_id, point, spec, proc_transport):
     """Nightly: the full crash-point matrix under real process death.
     Combos whose point never fires for that operator (e.g. a map has no
     write actions) degenerate to failure-free runs, as in the step-mode
     matrix."""
     build, expected = linear_pipeline(writes=1)
-    _run(build, expected, spec, [(op_id, point, 2)], require_fired=False)
+    _run(build, expected, spec, [(op_id, point, 2)], require_fired=False,
+         transport=proc_transport)
 
 
-def test_multiple_worker_kills(store_spec):
+def test_multiple_worker_kills(store_spec, proc_transport):
     """Two distinct groups SIGKILL'd in one run (Case 3 of the proof),
     against the LOGIO_STORE_SPEC-selected backends."""
     build, expected = linear_pipeline(writes=1)
     _run(build, expected, store_spec,
-         [("map", "post_ack_log", 2), ("win", "pre_log", 1)])
+         [("map", "post_ack_log", 2), ("win", "pre_log", 1)],
+         transport=proc_transport)
 
 
-def test_nonblocking_recovery_other_groups_advance():
+def test_nonblocking_recovery_other_groups_advance(proc_transport):
     """Kill one group mid-stream; the other workers keep processing while
-    it restarts (the paper's non-blocking property across processes)."""
+    it restarts (the paper's non-blocking property across processes). The
+    credit windows (default channel capacity) absorb the burst, so the
+    source advances without the supervisor buffering unboundedly."""
     build, expected = linear_pipeline(n_events=200, window=4,
                                       sink_target=50, writes=1, rate=0.005)
     eng = Engine(build(), mode="process", store=_mk("sqlite+sharded+group"),
-                 restart_delay=0.3)
+                 transport=proc_transport, restart_delay=0.3)
     eng.start()
     time.sleep(0.3)
     before = eng.process_stats().get("src", 0)
     eng.kill_group("win")
-    time.sleep(0.25)         # inside the restart_delay window: win is down
-    during = eng.process_stats().get("src", 0)
+    # poll inside the restart_delay window (win is down): the source must
+    # advance at some point — a single fixed-time sample is too brittle
+    # under CI scheduling load
+    deadline = time.time() + 0.25
+    during = before
+    while during <= before and time.time() < deadline:
+        during = eng.process_stats().get("src", 0)
+        time.sleep(0.005)
     assert eng.wait(90)
     eng.stop()
     assert during > before, "source stalled while win was down"
@@ -145,12 +157,14 @@ def _replica_pipeline(n):
     return build
 
 
-def test_scaling_on_live_workers():
+def test_scaling_on_live_workers(proc_transport):
     """Algorithms 12-13 against live worker processes: scale up a new
     replica process mid-run, then scale one down; replicas + source + sink
-    keep their processes throughout."""
+    keep their processes throughout. The transports re-grant / rebuild the
+    credit windows of the rewired channels on replica add/remove."""
     n = 60
-    eng = Engine(_replica_pipeline(n)(), mode="process", restart_delay=0.02)
+    eng = Engine(_replica_pipeline(n)(), mode="process",
+                 transport=proc_transport, restart_delay=0.02)
     ctrl = Controller(
         eng, "disp", "mrg",
         replica_factory=lambda rid: (lambda: MapOperator(
@@ -166,12 +180,12 @@ def test_scaling_on_live_workers():
         sorted(2 * i for i in range(n))
 
 
-def test_scaling_with_worker_kill():
+def test_scaling_with_worker_kill(proc_transport):
     """A replica worker SIGKILL'd while another is being scaled in."""
     n = 60
     inj = FailureInjector([("r0", "post_log", 3)])
     eng = Engine(_replica_pipeline(n)(), mode="process", injector=inj,
-                 restart_delay=0.02)
+                 transport=proc_transport, restart_delay=0.02)
     ctrl = Controller(
         eng, "disp", "mrg",
         replica_factory=lambda rid: (lambda: MapOperator(
@@ -214,7 +228,8 @@ def _shard_files(db_path, spec):
 @pytest.mark.parametrize("spec", ["sqlite+group", "sqlite+sharded+group"])
 @pytest.mark.parametrize("kill_after", [0.25, 0.6])
 def test_kill9_whole_engine_loses_exactly_unflushed_epoch(spec, kill_after,
-                                                          tmp_path):
+                                                          tmp_path,
+                                                          proc_transport):
     db_path = str(tmp_path / "log.db")
     ext_path = str(tmp_path / "external.bin")
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -224,7 +239,7 @@ def test_kill9_whole_engine_loses_exactly_unflushed_epoch(spec, kill_after,
         + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
     proc = subprocess.Popen(
         [sys.executable, os.path.join(repo_root, "tests", "kill9_runner.py"),
-         spec, db_path, ext_path],
+         spec, db_path, ext_path, proc_transport],
         stdout=subprocess.PIPE, env=env, start_new_session=True)
     try:
         assert proc.stdout.readline().strip() == b"READY"
@@ -258,7 +273,7 @@ def test_kill9_whole_engine_loses_exactly_unflushed_epoch(spec, kill_after,
     build, expected = linear_pipeline(writes=1, rate=0.01)
     eng = Engine(build(), mode="process", store=store,
                  external=FileExternalSystem(ext_path), resume=True,
-                 restart_delay=0.01)
+                 transport=proc_transport, restart_delay=0.01)
     eng.start()
     ok = eng.wait(90)
     eng.stop()
@@ -267,3 +282,92 @@ def test_kill9_whole_engine_loses_exactly_unflushed_epoch(spec, kill_after,
     win_writes = [b for b in eng.external.committed()
                   if isinstance(b, dict) and "inset" in b]
     assert len(win_writes) == 5
+
+
+# ---------------------------------------------------------------------------
+# Credit-based back-pressure: a slow consumer bounds every buffer at the
+# credit window instead of growing supervisor (or sender) memory.
+# ---------------------------------------------------------------------------
+
+def _bp_pipeline(n, window, sink_pt):
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(n)])))
+        p.add(lambda: MapOperator("map", fn=lambda b: b))
+        p.add(lambda: TerminalSink("sink", target=n,
+                                   processing_time=sink_pt))
+        p.connect("src", "out", "map", "in", capacity=window)
+        p.connect("map", "out", "sink", "in", capacity=window)
+        return p
+    return build
+
+
+def test_backpressure_bounds_buffers(proc_transport):
+    """Fast producer, slow consumer, tiny credit window: the supervisor's
+    authoritative buffers never exceed the window (routed) / never hold an
+    event at all (socket — payloads bypass the supervisor), and the run
+    still completes exactly-once."""
+    import threading
+    n, window = 120, 8
+    eng = Engine(_bp_pipeline(n, window, 0.002)(), mode="process",
+                 transport=proc_transport, store=mk_store("memory"))
+    eng.start()
+    peak = [0]
+
+    def watch():
+        while not eng._done.is_set():
+            peak[0] = max(peak[0],
+                          max((len(c) for c in eng.channels), default=0))
+            time.sleep(0.002)
+    t = threading.Thread(target=watch, daemon=True)
+    t.start()
+    ok = eng.wait(90)
+    t.join(timeout=5.0)
+    eng.stop()
+    assert ok
+    assert len(sink_outputs(eng)) == n
+    limit = 0 if proc_transport == "socket" else window
+    assert peak[0] <= limit, (proc_transport, peak[0], window)
+
+
+def test_end_of_stream_force_drain_with_lazy_watermark(proc_transport):
+    """Group-commit store whose tail batch would never flush on its own
+    (huge batch, 60s interval): at end of stream the supervisor must
+    detect quiescent-except-deferral — deferred acks keep their events in
+    the SENDER's buffer, so 'all buffers empty' alone would deadlock
+    against the force-drain — and push the watermark so the run
+    completes."""
+    build, expected = linear_pipeline(writes=1)
+    eng = Engine(build(), mode="process", transport=proc_transport,
+                 store=mk_store("sqlite+group", batch_size=100,
+                                interval=60.0))
+    eng.start()
+    ok = eng.wait(60)
+    eng.stop()
+    assert ok
+    assert sink_outputs(eng) == expected
+
+
+def test_blocked_sender_survives_receiver_sigkill(proc_transport):
+    """The producer is credit-blocked on a full window when its consumer
+    group is SIGKILL'd; recovery resets the window (routed re-grants from
+    the surviving buffer, socket re-transmits on reconnect) and the run
+    completes — a killed receiver never strands a sender."""
+    n, window = 80, 4
+    eng = Engine(_bp_pipeline(n, window, 0.004)(), mode="process",
+                 transport=proc_transport, store=_mk("sqlite+group"),
+                 restart_delay=0.05)
+    eng.start()
+    # wait until the slow sink consumed a bit — the window is certainly
+    # full and the upstream senders are blocked on credits
+    deadline = time.time() + 30.0
+    while eng.process_stats().get("sink", 0) < 10:
+        assert time.time() < deadline, "pipeline never reached steady state"
+        time.sleep(0.005)
+    eng.kill_group("sink")
+    ok = eng.wait(90)
+    eng.stop()
+    assert ok
+    assert eng.failures >= 1
+    assert len(sink_outputs(eng)) == n
