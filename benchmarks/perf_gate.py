@@ -1,0 +1,142 @@
+"""Perf gate: compare the current BENCH_*.json artifacts against a
+baseline run (the most recent ``bench-*`` artifact from main) and emit a
+markdown comparison table for the CI job summary.
+
+Non-blocking by design: a >threshold throughput regression prints a
+``::warning::`` annotation and flags the row, but the exit code is always
+0 — the gate reports the perf trajectory, it does not block merges on a
+noisy shared runner.
+
+Metrics compared (higher is better):
+  * rows named ``*throughput*`` in the name/us_per_call/derived files
+    (BENCH_pipeline.json, BENCH_process.json, BENCH_transport.json) —
+    ``derived`` is the events/sec figure;
+  * ``events_per_sec`` per config in BENCH_logstore.json.
+
+Usage:
+    python benchmarks/perf_gate.py --baseline DIR [--current DIR]
+                                   [--threshold 20]
+
+``--baseline`` may point at a directory tree (the artifact download
+action nests artifacts in subdirectories); files are found recursively
+by name.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, Optional
+
+BENCH_FILES = ("BENCH_pipeline.json", "BENCH_process.json",
+               "BENCH_transport.json", "BENCH_logstore.json")
+
+
+def _find(root: Path, fname: str) -> Optional[Path]:
+    if (root / fname).is_file():
+        return root / fname
+    hits = list(root.rglob(fname))
+    if not hits:
+        return None
+    # the download action nests artifacts per bench-<sha> directory; if
+    # several matched, prefer the newest file, not the first sha in sort
+    # order (shas sort randomly)
+    return max(hits, key=lambda p: p.stat().st_mtime)
+
+
+def _throughput_metrics(path: Path) -> Dict[str, float]:
+    """{metric name: events/sec} from one BENCH json file."""
+    try:
+        rows = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return {}
+    out: Dict[str, float] = {}
+    for row in rows:
+        if not isinstance(row, dict):
+            continue
+        if "events_per_sec" in row:                 # BENCH_logstore.json
+            name = row.get("config", "?")
+            try:
+                out[f"logstore/{name}"] = float(row["events_per_sec"])
+            except (TypeError, ValueError):
+                pass
+        elif "throughput" in str(row.get("name", "")):
+            try:
+                out[row["name"]] = float(row["derived"])
+            except (TypeError, ValueError):
+                pass
+    return out
+
+
+def collect(root: Path) -> Dict[str, float]:
+    metrics: Dict[str, float] = {}
+    for fname in BENCH_FILES:
+        path = _find(root, fname)
+        if path is not None:
+            metrics.update(_throughput_metrics(path))
+    return metrics
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the baseline BENCH_*.json "
+                         "(searched recursively)")
+    ap.add_argument("--current", default=".",
+                    help="directory holding this run's BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=20.0,
+                    help="warn when throughput drops by more than this "
+                         "percentage (default 20)")
+    args = ap.parse_args()
+
+    base = collect(Path(args.baseline))
+    cur = collect(Path(args.current))
+
+    print("## Perf gate (throughput vs latest `main` bench artifact)")
+    print()
+    if not base:
+        print("_No baseline metrics found — skipping comparison "
+              "(first run on this branch?)._")
+        return 0
+    if not cur:
+        print("_No current metrics found — did the benchmark steps run?_")
+        return 0
+
+    print(f"Warn threshold: **-{args.threshold:g}%** (non-blocking).")
+    print()
+    print("| metric | baseline ev/s | current ev/s | Δ | |")
+    print("|---|---:|---:|---:|---|")
+    regressions = []
+    for name in sorted(set(base) | set(cur)):
+        b, c = base.get(name), cur.get(name)
+        if b is None or c is None:
+            missing = "baseline" if b is None else "current"
+            print(f"| `{name}` | {b or '—'} | {c or '—'} | — | "
+                  f"_no {missing}_ |")
+            continue
+        delta = (c - b) / b * 100.0 if b else 0.0
+        flag = ""
+        if delta < -args.threshold:
+            flag = "⚠️ regression"
+            regressions.append((name, delta))
+        elif delta > args.threshold:
+            flag = "🚀"
+        print(f"| `{name}` | {b:,.0f} | {c:,.0f} | {delta:+.1f}% | {flag} |")
+    print()
+    if regressions:
+        print(f"**{len(regressions)} metric(s) regressed more than "
+              f"{args.threshold:g}%** (non-blocking; shared-runner noise "
+              "is common — check the trend across commits).")
+        for name, delta in regressions:
+            # ::warning:: annotations surface on the workflow run page
+            sys.stderr.write(
+                f"::warning title=perf regression::{name} dropped "
+                f"{-delta:.1f}% vs latest main bench artifact\n")
+    else:
+        print("No throughput regressions beyond the threshold.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

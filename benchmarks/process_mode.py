@@ -163,7 +163,7 @@ def backpressure_sweep(rows, *, quick: bool = False,
     peak events buffered in the supervisor, peak supervisor RSS growth."""
     n = 400 if quick else 1500
     sink_pt = 0.001
-    for transport in ("routed", "socket"):
+    for transport in ("routed", "socket", "tcp"):
         for window in windows:
             eng = Engine(_bp_build(n, window, sink_pt)(), mode="process",
                          transport=transport, store="memory")

@@ -2,8 +2,10 @@
 # fine-grain data lineage capture for distributed data pipelines.
 from repro.core.builtin import (CountWindowOperator, GeneratorSource,
                                 MapOperator, SyncJoinOperator, TerminalSink)
+from repro.core.cluster import LocalCluster
 from repro.core.engine import Engine, FailureInjector, Pipeline
 from repro.core.transport import Channel, ChannelClosed
+from repro.core.transport.base import Placement, WorkerBootstrap
 from repro.core.events import Event, ReadAction
 from repro.core.lineage import LineageScope, backward, enabled_ports, forward
 from repro.core.logstore import (GroupCommitStore, LogBackend, MemoryLogStore,

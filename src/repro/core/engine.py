@@ -25,13 +25,16 @@ Three execution modes:
 from __future__ import annotations
 
 import collections
+import multiprocessing
+import os
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.builtin import GeneratorSource
 from repro.core.transport import Channel
-from repro.core.transport.base import process_transport_names
+from repro.core.transport.base import (Placement, WorkerBootstrap,
+                                       process_transport_names)
 from repro.core.lineage import LineageScope, enabled_ports
 from repro.core.logstore import LogBackend, MemoryLogStore, build_store
 from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
@@ -108,6 +111,10 @@ class Engine:
                  injector: Optional[FailureInjector] = None,
                  mode: str = "thread",
                  transport: Optional[str] = None,
+                 transport_options: Optional[dict] = None,
+                 ctx: Optional[str] = None,
+                 placement: Optional[Any] = None,
+                 cluster: Optional[Any] = None,
                  restart_delay: float = 0.05,
                  replay_ops: Sequence[str] = (),
                  abs_options: Optional[dict] = None,
@@ -117,8 +124,17 @@ class Engine:
         every operator in state "restarted" — warm restart of a whole
         pipeline against a recovered store (full-process crash).
         ``transport`` selects the process-mode channel implementation
-        (``"routed"``/``"socket"``); thread and step mode always use the
-        in-memory ``"local"`` transport."""
+        (``"routed"``/``"socket"``/``"tcp"``); thread and step mode always
+        use the in-memory ``"local"`` transport.  ``transport_options``
+        configures the socket family (``{"family": "unix"|"inet"}``), bind
+        host and authkey.  ``ctx`` selects the worker start method
+        (``"fork"``/``"spawn"``): spawn workers are rebuilt purely from a
+        picklable :class:`WorkerBootstrap` payload + the log, never from
+        inherited parent memory — group factories must then be picklable.
+        ``placement`` (a :class:`Placement` or a ``{group: node}`` dict)
+        assigns groups to cluster nodes; ``cluster`` is the node-agent
+        harness (e.g. :class:`repro.core.cluster.LocalCluster`) that
+        launches workers on those nodes."""
         self.pipeline = pipeline
         self._resume = resume
         if mode == "process":
@@ -127,11 +143,48 @@ class Engine:
                 raise ValueError(
                     f"unknown process transport {self.transport!r} "
                     f"(have {process_transport_names()})")
+            if ctx is None:
+                ctx = ("fork" if "fork" in
+                       multiprocessing.get_all_start_methods() else "spawn")
+            if ctx not in multiprocessing.get_all_start_methods():
+                raise ValueError(
+                    f"unknown start method ctx={ctx!r} "
+                    f"(have {multiprocessing.get_all_start_methods()})")
         else:
             if transport not in (None, "local"):
                 raise ValueError(
                     f"transport={transport!r} requires mode='process'")
+            if ctx is not None or placement is not None \
+                    or cluster is not None:
+                raise ValueError(
+                    "ctx=/placement=/cluster= require mode='process'")
             self.transport = "local"
+        self.proc_ctx = ctx
+        self.transport_options = dict(transport_options or {})
+        if self.transport in ("socket", "tcp"):
+            if self.transport == "tcp":
+                if self.transport_options.get("family", "inet") != "inet":
+                    raise ValueError(
+                        "transport='tcp' is pinned to family='inet'; use "
+                        "transport='socket' for other families")
+                self.transport_options["family"] = "inet"
+            # per-run authkey: worker listeners authenticate every peer
+            # connection (an AF_INET listener is reachable by anything on
+            # the network, unlike a mode-0600 unix socket)
+            self.transport_options.setdefault("authkey", os.urandom(20))
+            fam = self.transport_options.get("family")
+            if fam not in (None, "unix", "inet"):
+                raise ValueError(f"unknown socket family {fam!r} "
+                                 "(expected 'unix' or 'inet')")
+            if fam == "unix" and not hasattr(__import__("socket"),
+                                             "AF_UNIX"):
+                raise ValueError("family='unix' unavailable on this host")
+        if isinstance(placement, dict):
+            placement = Placement(placement)
+        self.placement = placement or Placement()
+        self.cluster = cluster
+        if cluster is None and self.placement.nodes():
+            raise ValueError("placement names nodes but no cluster= given")
         if isinstance(store, str):
             store = build_store(store)
         self.store: LogBackend = store or MemoryLogStore()
@@ -211,6 +264,30 @@ class Engine:
 
     def group_ops(self, group: str) -> List[str]:
         return [o for o, g in self.pipeline.groups.items() if g == group]
+
+    def make_bootstrap(self, group: str, *, recover: bool,
+                       incarnation: int) -> WorkerBootstrap:
+        """The picklable payload a worker (re)starts from — a snapshot of
+        the live topology (scaling mutates ``pipeline.connections`` and
+        ``engine.channels`` in lock-step, so connection tuples are the
+        authoritative channel specs) plus this group's factories.  No
+        recovery state crosses: the worker rebuilds it from the log."""
+        p = self.pipeline
+        return WorkerBootstrap(
+            group=group,
+            incarnation=incarnation,
+            recover=recover,
+            transport=self.transport,
+            transport_options=dict(self.transport_options),
+            factories={o: f for o, f in p.factories.items()
+                       if p.groups[o] == group},
+            connections=list(p.connections),
+            groups=dict(p.groups),
+            lineage_ports={o: self._lineage_ports[o]
+                           for o in self.group_ops(group)
+                           if o in self._lineage_ports},
+            replay_ops=frozenset(self.replay_ops),
+        )
 
     # ------------------------------------------------------------------
     def signal_done(self):

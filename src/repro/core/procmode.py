@@ -1,6 +1,6 @@
 """Process-per-group execution mode (``Engine(mode="process")``).
 
-Each operator group runs in its own forked OS process — a real pod, not a
+Each operator group runs in its own OS process — a real pod, not a
 thread — so crash = ``kill -9`` is a first-class scenario: a SIGKILL'd
 worker takes its volatile operator state with it and the supervisor
 warm-restarts only that group while every other worker keeps processing
@@ -11,26 +11,44 @@ Topology (transport-dependent; see :mod:`repro.core.transport`)::
 
     parent (supervisor)                      worker (one per group)
     ───────────────────                      ──────────────────────
-    SupervisorTransport     ◄─ tr pipe ──►   WorkerTransport
+    SupervisorTransport     ◄─ tr conn ──►   WorkerTransport
       routed: authoritative Channels           routed: replicas + credits
-      socket: address broker + probes          socket: sender-held buffers,
-                                                direct worker↔worker sockets
+      socket/tcp: address broker + probes      socket/tcp: sender-held
+                                                buffers, direct
+                                                worker↔worker sockets
     LogBackend (the one     ◄─── RPC ─────►  StoreClient / ExternalClient /
     sqlite-family store),                    InjectorClient / ScratchClient
     ExternalSystem,
     FailureInjector,
     supervisor + router threads              protocol loop (+ socket threads)
+    _ControlHub (cluster    ◄─ dial-back ──  node-agent workers connect
+    mode: TCP rendezvous)                    their rpc/tr conns here
 
+* **Worker bootstrap** — a worker never inherits the live engine object.
+  It starts from a picklable
+  :class:`~repro.core.transport.base.WorkerBootstrap` payload (pipeline
+  spec, group assignment, transport config, incarnation) and rebuilds its
+  operators purely from the payload + the log, so
+  ``Engine(mode="process", ctx="spawn")`` works — and so a worker can in
+  principle be launched by an ``ssh``/container entrypoint on another
+  machine.  Under ``ctx="fork"`` the payload crosses by inheritance (no
+  pickling), so factories may stay closures; under ``ctx="spawn"`` (and
+  on node agents, which always spawn) they must be picklable.
+* **Placement** — :class:`~repro.core.transport.base.Placement` maps each
+  group to a node.  ``None`` spawns a direct child; a node name routes
+  the bootstrap to that node's agent (see :mod:`repro.core.cluster`),
+  and the worker dials its RPC + transport connections back to the
+  supervisor's :class:`_ControlHub` (authkey-authenticated TCP).
 * **Transport** — behind the formal interface in
   :mod:`repro.core.transport.base`.  ``routed`` keeps every authoritative
-  buffer in the supervisor and pumps deliveries over pipes; ``socket``
-  moves the reliable buffer to the sender-side worker and events bypass
-  the supervisor entirely.  Both enforce credit-based back-pressure at
-  the channel capacity and both preserve per-port FIFO + ack +
-  durability-watermark semantics exactly as in thread mode.
+  buffer in the supervisor and pumps deliveries over the tr conn;
+  ``socket``/``tcp`` move the reliable buffer to the sender-side worker
+  and events bypass the supervisor entirely.  All enforce credit-based
+  back-pressure at the channel capacity and preserve per-port FIFO + ack
+  + durability-watermark semantics exactly as in thread mode.
 * **Log store** — all workers share the parent's single store through a
   synchronous RPC proxy (:class:`StoreClient`).  Transaction ops are plain
-  tuples, so they cross the pipe verbatim; ``TxnAborted`` stays
+  tuples, so they cross the conn verbatim; ``TxnAborted`` stays
   synchronous.  Group-commit batching, the durability watermark and the
   global flush-epoch 2PC all run in the parent, shared by every worker.
 * **Failure injection** — crash points RPC to the parent's injector (its
@@ -41,10 +59,6 @@ Topology (transport-dependent; see :mod:`repro.core.transport`)::
   cross-checks worker idle reports against its own delivery counters; the
   socket supervisor runs a two-wave activity probe (no central counters
   exist by design).
-
-Workers are forked (``multiprocessing`` "fork" context), so operator
-factories need not be picklable; only :class:`~repro.core.events.Event`
-payloads and transaction op tuples cross process boundaries.
 """
 from __future__ import annotations
 
@@ -53,29 +67,34 @@ import os
 import signal
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from multiprocessing import AuthenticationError
+from multiprocessing import connection as mpc
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.builtin import GeneratorSource, ScratchStore
 from repro.core.logstore.base import LogBackend, TxnAborted
 from repro.core.operator import OperatorRuntime, SimulatedCrash
 from repro.core.recovery import recover_operator
-from repro.core.transport.base import (make_supervisor_transport,
+from repro.core.transport.base import (WorkerBootstrap,
+                                       make_supervisor_transport,
                                        make_worker_transport)
-
-_CTX = multiprocessing.get_context("fork")
 
 # a group is declared failed (and the run aborted) after this many total
 # restarts — a CI hygiene bound against unbounded crash loops, far above
 # any finite failure-injection plan; not a protocol constant
 MAX_RESTARTS_PER_GROUP = 50
 
+# a node-agent spawn (request -> spawned ack -> rpc/tr dial-back) must
+# complete within this budget or the run is declared failed
+SPAWN_TIMEOUT = 30.0
+
 
 # ---------------------------------------------------------------------------
-# Worker-side proxies (everything here runs in the forked child)
+# Worker-side proxies (everything here runs in the worker process)
 # ---------------------------------------------------------------------------
 
 class _Rpc:
-    """Synchronous request/response over the worker's RPC pipe. The worker
+    """Synchronous request/response over the worker's RPC conn. The worker
     runs one protocol thread, so one outstanding request at a time by
     design (socket reader threads never touch the store)."""
 
@@ -218,23 +237,26 @@ class InjectorClient:
         self.rpc.call("inj", op_id, point)
 
 
-def _worker_main(engine, group: str, rpc_conn, tr_conn, recover: bool):
-    """The forked worker: rebuild the group's operators against proxy
-    store/external/channels, recover if asked, then run the thread-mode
-    group loop with deliveries arriving over the transport."""
+def _worker_main(bootstrap: WorkerBootstrap, rpc_conn, tr_conn):
+    """The worker: rebuild the group's operators from the bootstrap
+    payload against proxy store/external/channels, recover from the log
+    if asked, then run the thread-mode group loop with deliveries
+    arriving over the transport.  Nothing here reads parent memory."""
+    group = bootstrap.group
+    recover = bootstrap.recover
     rpc = _Rpc(rpc_conn)
     store = StoreClient(rpc)
     external = ExternalClient(rpc)
     injector = InjectorClient(rpc)
     ScratchStore.backend = ScratchClient(rpc)
 
-    wt = make_worker_transport(engine.transport, engine, group, tr_conn)
-    pipeline = engine.pipeline
-    group_ops = [o for o, g in pipeline.groups.items() if g == group]
+    wt = make_worker_transport(bootstrap.transport, bootstrap, group,
+                               tr_conn)
+    group_ops = bootstrap.group_ops()
     channels = wt.channels
     ops, runtimes = {}, {}
     for op_id in group_ops:
-        op = pipeline.factories[op_id]()
+        op = bootstrap.factories[op_id]()
         op.state = "restarted" if recover else "running"
         op.in_channels = {}
         op.out_channels = {p: [] for p in op.output_ports}
@@ -243,13 +265,13 @@ def _worker_main(engine, group: str, rpc_conn, tr_conn, recover: bool):
                 op.in_channels[ch.rec_port] = ch
             if ch.send_op == op_id:
                 op.out_channels.setdefault(ch.send_port, []).append(ch)
-        lin_in, lin_out = engine._lineage_ports.get(op_id, (set(), set()))
+        lin_in, lin_out = bootstrap.lineage_ports.get(op_id, (set(), set()))
         ops[op_id] = op
         runtimes[op_id] = OperatorRuntime(
             op, store, lineage_in=lin_in, lineage_out=lin_out,
             external=external, crash_point=injector,
             stop_flag=lambda: wt.stopped,
-            replay_mode=op_id in engine.replay_ops,
+            replay_mode=op_id in bootstrap.replay_ops,
             keep_state_history=bool(lin_out))
 
     if recover:
@@ -257,8 +279,8 @@ def _worker_main(engine, group: str, rpc_conn, tr_conn, recover: bool):
             op = ops[op_id]
             is_source = isinstance(op, GeneratorSource)
             replay_pred_ports = {dp for s, sp, d, dp, _ in
-                                 pipeline.connections
-                                 if d == op_id and s in engine.replay_ops}
+                                 bootstrap.connections
+                                 if d == op_id and s in bootstrap.replay_ops}
             recover_operator(runtimes[op_id], is_source=is_source,
                              source_driver=GeneratorSource.driver
                              if is_source else None,
@@ -319,14 +341,28 @@ def _worker_main(engine, group: str, rpc_conn, tr_conn, recover: bool):
         wt.pump(0.005)
 
 
-def _worker_entry(engine, group, rpc_conn, tr_conn, recover):
+def _dial_control(bootstrap: WorkerBootstrap, kind: str):
+    """Connect one channel (``"rpc"``/``"tr"``) back to the supervisor's
+    control hub — how a node-agent worker, started from nothing but the
+    bootstrap payload, reaches its supervisor."""
+    addr, authkey = bootstrap.control
+    conn = mpc.Client(addr, authkey=authkey)
+    conn.send(("worker", kind, bootstrap.group, bootstrap.incarnation))
+    return conn
+
+
+def _worker_entry(bootstrap: WorkerBootstrap, rpc_conn=None, tr_conn=None):
     try:
-        _worker_main(engine, group, rpc_conn, tr_conn, recover)
-    except (EOFError, BrokenPipeError, OSError):
-        pass                       # parent stopped / pipe torn down
+        if rpc_conn is None:
+            rpc_conn = _dial_control(bootstrap, "rpc")
+            tr_conn = _dial_control(bootstrap, "tr")
+        _worker_main(bootstrap, rpc_conn, tr_conn)
+    except (EOFError, BrokenPipeError, OSError, AuthenticationError):
+        pass                       # parent stopped / conn torn down
     finally:
-        # skip interpreter teardown: the fork inherited parent resources
-        # (sqlite connections, thread locks) that must not be finalized here
+        # skip interpreter teardown: under fork the child inherited parent
+        # resources (sqlite connections, thread locks) that must not be
+        # finalized here; under spawn there is simply nothing to flush
         os._exit(0)
 
 
@@ -337,7 +373,8 @@ def _worker_entry(engine, group, rpc_conn, tr_conn, recover):
 class _WorkerHandle:
     def __init__(self, group: str):
         self.group = group
-        self.proc: Optional[Any] = None
+        self.proc: Optional[Any] = None    # mp.Process or _RemoteProc
+        self.node: Optional[str] = None    # placement of this incarnation
         self.rpc_conn = None
         self.tr_conn = None
         self.rpc_thread: Optional[threading.Thread] = None
@@ -354,6 +391,10 @@ class _WorkerHandle:
         self.stopping = False
         self.restarts = 0              # total for this group (never reset)
         self.incarnation = 0           # bumped on every (re)spawn
+        self.spawn_token = 0           # bumped before each spawn attempt:
+        # the bootstrap/dial-back rendezvous id (the incarnation itself is
+        # only bumped once the worker's conns are attached, in the same
+        # critical section as the credit-window computation)
 
     def send(self, msg, incarnation: Optional[int] = None) -> bool:
         """Send to the worker. ``incarnation`` pins the message to the
@@ -372,20 +413,175 @@ class _WorkerHandle:
                 return False
 
 
+class _RemoteProc:
+    """Process-like handle for a worker launched via a node agent: pid and
+    liveness come from agent reports over the control hub, and kill is
+    routed through the agent (the supervisor cannot signal a pid on
+    another host).  A dead node (agent conn EOF) makes every worker on it
+    report dead — genuine whole-node failure semantics."""
+
+    def __init__(self, node: "_NodeHandle", group: str, token: int):
+        self.node = node
+        self.group = group
+        self.token = token
+        self.pid: Optional[int] = None
+        self._pid_evt = threading.Event()
+        self._exit_evt = threading.Event()
+
+    def set_pid(self, pid: int):
+        self.pid = pid
+        self._pid_evt.set()
+
+    def wait_pid(self, timeout: float) -> Optional[int]:
+        self._pid_evt.wait(timeout)
+        return self.pid
+
+    def mark_exited(self):
+        self._exit_evt.set()
+
+    def is_alive(self) -> bool:
+        return not self._exit_evt.is_set() and self.node.alive
+
+    def join(self, timeout: Optional[float] = None):
+        deadline = None if timeout is None else time.time() + timeout
+        while not self._exit_evt.is_set() and self.node.alive:
+            if deadline is not None and time.time() >= deadline:
+                return
+            self._exit_evt.wait(0.05)
+
+    def kill(self):
+        if self.pid is not None:
+            self.node.send(("kill", self.pid))
+
+
+class _NodeHandle:
+    """Supervisor-side view of one node agent's control connection."""
+
+    def __init__(self, driver: "ProcessEngineDriver", name: str, pid: int,
+                 conn):
+        self.driver = driver
+        self.name = name
+        self.pid = pid
+        self.conn = conn
+        self.alive = True
+        self.lock = threading.Lock()       # send + proc registry
+        self.procs: Dict[Tuple[str, int], _RemoteProc] = {}
+
+    def send(self, msg) -> bool:
+        with self.lock:
+            if not self.alive:
+                return False
+            try:
+                self.conn.send(msg)
+                return True
+            except (OSError, ValueError):
+                self.alive = False
+                return False
+
+    def loop(self):
+        while True:
+            try:
+                msg = self.conn.recv()
+            except (EOFError, OSError):
+                self.driver.on_node_dead(self)
+                return
+            kind = msg[0]
+            with self.lock:
+                p = self.procs.get((msg[1], msg[2]))
+            if p is None:
+                continue
+            if kind == "spawned":
+                p.set_pid(msg[3])
+            elif kind == "exit":
+                p.mark_exited()
+
+
+class _ControlHub:
+    """Supervisor-side rendezvous listener (AF_INET + authkey): node
+    agents announce themselves here, and bootstrap-only workers dial
+    their RPC and transport connections back — the supervisor half of a
+    worker start that involves no fork inheritance at all."""
+
+    def __init__(self, driver: "ProcessEngineDriver",
+                 host: str = "127.0.0.1"):
+        self.driver = driver
+        self.authkey = os.urandom(20)
+        self.listener = mpc.Listener((host, 0), family="AF_INET",
+                                     authkey=self.authkey)
+        self.address = self.listener.address
+        self._cv = threading.Condition()
+        self._pending: Dict[Tuple[str, str, int], Any] = {}
+        self._closed = False
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name="ctl-hub").start()
+
+    def _accept_loop(self):
+        while not self._closed:
+            try:
+                conn = self.listener.accept()
+                hello = conn.recv()
+            except AuthenticationError:
+                continue                  # wrong/missing authkey: reject
+            except (OSError, EOFError):
+                if self._closed:
+                    return
+                # dead dialer mid-handshake: keep listening; the sleep
+                # bounds the spin if accept() itself fails persistently
+                time.sleep(0.01)
+                continue
+            if not (isinstance(hello, tuple) and hello):
+                conn.close()
+                continue
+            if hello[0] == "node":
+                self.driver.on_node_connected(hello[1], hello[2], conn)
+            elif hello[0] == "worker":
+                with self._cv:
+                    self._pending[(hello[1], hello[2], hello[3])] = conn
+                    self._cv.notify_all()
+            else:
+                conn.close()
+
+    def wait_worker(self, kind: str, group: str, token: int,
+                    timeout: float):
+        """The (kind, group, spawn-token) dial-back conn, or None."""
+        deadline = time.time() + timeout
+        key = (kind, group, token)
+        with self._cv:
+            while key not in self._pending:
+                left = deadline - time.time()
+                if left <= 0:
+                    return None
+                self._cv.wait(left)
+            return self._pending.pop(key)
+
+    def close(self):
+        self._closed = True
+        try:
+            self.listener.close()
+        except OSError:
+            pass
+
+
 class ProcessEngineDriver:
-    """Supervisor: spawns one forked worker per operator group, owns the
-    shared store/external/injector and the transport's supervisor half,
-    detects worker death (SIGKILL included) and warm-restarts only the
-    failed group while the rest keep processing."""
+    """Supervisor: starts one worker process per operator group (direct
+    child under the configured mp context, or via a node agent per the
+    placement), owns the shared store/external/injector and the
+    transport's supervisor half, detects worker death (SIGKILL included)
+    and warm-restarts only the failed group while the rest keep
+    processing."""
 
     def __init__(self, engine):
         self.e = engine
+        self.ctx = multiprocessing.get_context(engine.proc_ctx)
         self.lock = threading.RLock()
         self.workers: Dict[str, _WorkerHandle] = {}
         self.ch_by_name: Dict[str, Any] = {}
         self._stop = threading.Event()
         self._failed = threading.Event()
         self._supervisor: Optional[threading.Thread] = None
+        self._hub: Optional[_ControlHub] = None
+        self._nodes: Dict[str, _NodeHandle] = {}
+        self._nodes_cv = threading.Condition()
         # cumulative per-op event counters across worker incarnations
         # (live worker stats land in _op_stats_live, folded into
         # _op_stats_base when the incarnation dies)
@@ -413,37 +609,144 @@ class ProcessEngineDriver:
         """Re-deliver/rebroadcast after a topology change (scaling)."""
         self.transport.after_rewire()
 
+    # ---- node agents -----------------------------------------------------
+    def on_node_connected(self, name: str, pid: int, conn):
+        """A node agent dialed the control hub (cluster start or warm node
+        restart): adopt the fresh connection; a previous incarnation of
+        the node is dead by definition."""
+        nh = _NodeHandle(self, name, pid, conn)
+        with self._nodes_cv:
+            old = self._nodes.get(name)
+            if old is not None:
+                old.alive = False
+            self._nodes[name] = nh
+            self._nodes_cv.notify_all()
+        threading.Thread(target=nh.loop, daemon=True,
+                         name=f"node-{name}").start()
+
+    def on_node_dead(self, nh: _NodeHandle):
+        """Agent conn EOF = the node died.  Every worker on it reports
+        dead (their handles' `_RemoteProc.is_alive` goes False), so the
+        supervision loop warm-restarts exactly those groups — after
+        `_ensure_node` brings a fresh agent up — while workers on other
+        nodes keep processing."""
+        nh.alive = False
+        with self._nodes_cv:
+            self._nodes_cv.notify_all()
+
+    def _ensure_node(self, name: str, timeout: float = 20.0) -> _NodeHandle:
+        with self._nodes_cv:
+            nh = self._nodes.get(name)
+            if nh is not None and nh.alive:
+                return nh
+        cluster = self.e.cluster
+        if cluster is None:
+            raise RuntimeError(
+                f"group placed on node {name!r} but no cluster= given")
+        cluster.ensure_node(name)
+        deadline = time.time() + timeout
+        with self._nodes_cv:
+            while True:
+                nh = self._nodes.get(name)
+                if nh is not None and nh.alive:
+                    return nh
+                left = deadline - time.time()
+                if left <= 0:
+                    raise RuntimeError(f"node {name!r} did not come up")
+                self._nodes_cv.wait(left)
+
     # ---- lifecycle -------------------------------------------------------
     def start(self):
+        if self.e.cluster is not None:
+            self._hub = _ControlHub(self)
+            self.e.cluster.start(self._hub.address, self._hub.authkey)
         for g in sorted(set(self.e.pipeline.groups.values())):
             self._spawn(g, recover=self.e._resume)
         self._supervisor = threading.Thread(target=self._supervise,
                                             daemon=True, name="proc-super")
         self._supervisor.start()
 
+    def _remote_spawn(self, node: str, group: str, token: int,
+                      bootstrap: WorkerBootstrap):
+        """Launch a worker through a node agent: ship the bootstrap, wait
+        for the spawned ack and the worker's rpc/tr dial-backs.  One
+        retry after re-ensuring the node covers an agent that died
+        between placement lookup and spawn."""
+        last_err = "node unavailable"
+        for _attempt in range(2):
+            try:
+                nh = self._ensure_node(node)
+            except RuntimeError as exc:
+                last_err = str(exc)
+                continue
+            proc = _RemoteProc(nh, group, token)
+            with nh.lock:
+                for key in [k for k in nh.procs if k[0] == group]:
+                    del nh.procs[key]       # dead incarnations' entries
+                nh.procs[(group, token)] = proc
+            if not nh.send(("spawn", bootstrap)):
+                last_err = f"node {node!r} connection lost"
+                continue
+            if proc.wait_pid(SPAWN_TIMEOUT / 2) is None:
+                last_err = f"node {node!r} never acknowledged the spawn"
+                continue
+            rpc_conn = self._hub.wait_worker("rpc", group, token,
+                                             SPAWN_TIMEOUT / 2)
+            tr_conn = self._hub.wait_worker("tr", group, token,
+                                            SPAWN_TIMEOUT / 2)
+            if rpc_conn is None or tr_conn is None:
+                last_err = f"worker {group!r} never dialed back"
+                continue
+            return proc, rpc_conn, tr_conn
+        raise RuntimeError(
+            f"spawn of {group!r} on node {node!r} failed: {last_err}")
+
     def _spawn(self, group: str, recover: bool):
+        node = self.e.placement.node_of(group)
         with self.lock:
             h = self.workers.get(group)
             if h is None:
                 h = _WorkerHandle(group)
                 self.workers[group] = h
-            rpc_parent, rpc_child = _CTX.Pipe()
-            tr_parent, tr_child = _CTX.Pipe()
+            h.spawn_token += 1
+            token = h.spawn_token
+            h.stopping = False
+            bootstrap = self.e.make_bootstrap(group, recover=recover,
+                                              incarnation=token)
+        if node is None:
+            # direct child of the supervisor under the configured context:
+            # fork inherits the (unpicklable-safe) payload, spawn pickles
+            # it — either way the worker reads only the bootstrap
+            rpc_parent, rpc_child = self.ctx.Pipe()
+            tr_parent, tr_child = self.ctx.Pipe()
+            proc = self.ctx.Process(target=_worker_entry,
+                                    args=(bootstrap, rpc_child, tr_child),
+                                    daemon=True, name=f"logio-{group}")
+            proc.start()
+            rpc_child.close()
+            tr_child.close()
+            rpc_conn, tr_conn = rpc_parent, tr_parent
+        else:
+            bootstrap.control = (self._hub.address, self._hub.authkey)
+            try:
+                proc, rpc_conn, tr_conn = self._remote_spawn(
+                    node, group, token, bootstrap)
+            except RuntimeError:
+                if self._stop.is_set():
+                    return
+                with self.lock:
+                    self.e.group_state[group] = "failed"
+                self._failed.set()
+                return
+        with self.lock:
             with h.send_lock:      # serialize with incarnation-pinned sends
-                h.rpc_conn, h.tr_conn = rpc_parent, tr_parent
+                h.rpc_conn, h.tr_conn = rpc_conn, tr_conn
                 h.incarnation += 1
             h.sent = 0
             h.last_idle = None
             h.probe = None
-            h.stopping = False
-            proc = _CTX.Process(target=_worker_entry,
-                                args=(self.e, group, rpc_child, tr_child,
-                                      recover),
-                                daemon=True, name=f"logio-{group}")
-            proc.start()
-            rpc_child.close()
-            tr_child.close()
             h.proc = proc
+            h.node = node
             h.alive = True
             self.e.group_state[group] = "running"
             h.rpc_thread = threading.Thread(
@@ -459,9 +762,11 @@ class ProcessEngineDriver:
             # a buffer state this initial window has not accounted for
             initial_msgs = self.transport.on_spawn_locked(h)
             inc = h.incarnation
-        for m in initial_msgs:         # pipe sends outside the driver lock
+        for m in initial_msgs:         # conn sends outside the driver lock
             h.send(m, incarnation=inc)
         self.transport.on_spawned(h)
+        if self._stop.is_set() or h.stopping:
+            h.send(("stop",))          # stop raced the (remote) spawn
 
     # ---- parent RPC thread ----------------------------------------------
     def _rpc_loop(self, h: _WorkerHandle):
@@ -521,10 +826,10 @@ class ProcessEngineDriver:
             self._on_worker_death(h)
 
     def _on_worker_death(self, h: _WorkerHandle):
-        """A worker died (SIGKILL, injected crash, or error). Volatile
-        state is gone; the store and the external system live in this
-        process and buffered events are either held by the transport or
-        re-derivable from the log — roll back by warm-restarting only
+        """A worker died (SIGKILL, injected crash, node death, or error).
+        Volatile state is gone; the store and the external system live in
+        this process and buffered events are either held by the transport
+        or re-derivable from the log — roll back by warm-restarting only
         this group (non-blocking for the others)."""
         group = h.group
         self.e.failures += 1
@@ -556,13 +861,20 @@ class ProcessEngineDriver:
 
     # ---- external controls ----------------------------------------------
     def kill_group(self, group: str):
-        """SIGKILL the group's worker — genuine node failure."""
+        """SIGKILL the group's worker — genuine node failure.  Remote
+        workers are killed through their node agent (the supervisor
+        cannot signal a pid on another host)."""
         with self.lock:
             h = self.workers.get(group)
-            pid = h.proc.pid if h is not None and h.alive else None
-        if pid is not None:
+            proc = h.proc if h is not None and h.alive else None
+        if proc is None:
+            return
+        if isinstance(proc, _RemoteProc):
+            proc.kill()
+            return
+        if proc.pid is not None:
             try:
-                os.kill(pid, signal.SIGKILL)
+                os.kill(proc.pid, signal.SIGKILL)
             except ProcessLookupError:
                 pass
 
@@ -578,7 +890,7 @@ class ProcessEngineDriver:
             h.proc.join(timeout=2.0)
             if h.proc.is_alive():
                 h.proc.kill()
-                h.proc.join()
+                h.proc.join(timeout=5.0)
         # drain the router threads BEFORE folding the stats — a buffered
         # final "stats" message would otherwise re-populate the live map
         # after the fold and double-count the incarnation
@@ -594,7 +906,9 @@ class ProcessEngineDriver:
                 self.workers.pop(group, None)
 
     def start_group(self, group: str, *, recover: bool):
-        """(Re)start a group's worker (dynamic scaling)."""
+        """(Re)start a group's worker (dynamic scaling) — lands on
+        whatever node the placement currently assigns, so scaling can
+        move or add replicas across nodes."""
         self.refresh_channels()
         if recover:
             h = self.workers.get(group)
@@ -645,11 +959,19 @@ class ProcessEngineDriver:
                 h.proc.join(timeout=2.0)
                 if h.proc.is_alive():
                     h.proc.kill()
-                    h.proc.join()
+                    h.proc.join(timeout=5.0)
             h.alive = False
         if self._supervisor is not None:
             self._supervisor.join(timeout=5.0)
         self.transport.request_stop()
+        with self._nodes_cv:
+            nodes = list(self._nodes.values())
+        for nh in nodes:
+            nh.send(("stop",))
+        if self.e.cluster is not None:
+            self.e.cluster.stop()
+        if self._hub is not None:
+            self._hub.close()
         for h in handles:
             for conn in (h.rpc_conn, h.tr_conn):
                 try:

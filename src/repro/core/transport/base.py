@@ -45,7 +45,8 @@ the window), so a SIGKILL'd receiver never strands a sender.
 from __future__ import annotations
 
 import abc
-from typing import Any, Callable, Dict, Optional
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class ChannelEndpoint(abc.ABC):
@@ -99,12 +100,96 @@ class ChannelEndpoint(abc.ABC):
         """Events occupying credits (buffered, including deferred)."""
 
 
+# ---------------------------------------------------------------------------
+# spawn-safe worker bootstrap
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChannelSpec:
+    """Picklable description of one channel — what a worker transport needs
+    to rebuild its endpoints without touching the live (unpicklable)
+    supervisor-side :class:`~repro.core.transport.local.Channel` objects."""
+
+    send_op: str
+    send_port: str
+    rec_op: str
+    rec_port: str
+    capacity: int
+
+    @property
+    def name(self) -> str:
+        return f"{self.send_op}.{self.send_port}->{self.rec_op}.{self.rec_port}"
+
+
+@dataclasses.dataclass
+class WorkerBootstrap:
+    """Everything a worker process needs to rebuild its operator group —
+    picklable by stdlib :mod:`pickle`, so a worker can start under the
+    ``spawn`` multiprocessing context (or, in principle, an ``ssh`` /
+    container entrypoint) and never relies on fork-inherited parent
+    memory.  Recovery state is NOT here: the worker rebuilds volatile
+    operator state purely from this payload plus the shared log (over the
+    store RPC).
+
+    ``factories`` holds only this group's operator factories; under
+    ``spawn`` they must be picklable (module-level callables /
+    ``functools.partial`` — no closures).  ``control`` is the supervisor's
+    rendezvous for workers launched by a node agent: ``((host, port),
+    authkey)`` of the control hub; such workers dial back their RPC and
+    transport connections instead of inheriting pipes.
+    """
+
+    group: str
+    incarnation: int
+    recover: bool
+    transport: str
+    transport_options: Dict[str, Any]
+    factories: Dict[str, Callable]
+    connections: List[Tuple[str, str, str, str, int]]
+    groups: Dict[str, str]
+    lineage_ports: Dict[str, Tuple]
+    replay_ops: frozenset
+    control: Optional[Tuple[Any, bytes]] = None
+
+    @property
+    def channels(self) -> List[ChannelSpec]:
+        return [ChannelSpec(s, sp, d, dp, cap)
+                for (s, sp, d, dp, cap) in self.connections]
+
+    def group_ops(self) -> List[str]:
+        return [o for o, g in self.groups.items() if g == self.group]
+
+
+class Placement:
+    """Group -> node assignment for process mode.  ``None`` means "spawn a
+    direct child of the supervisor" (the single-host default); a node name
+    means "launch via that node's agent" (:class:`repro.core.cluster`
+    resolves names to agent processes).  Mutable so dynamic scaling can
+    place new replicas (`assign`) before ``start_group`` spawns them."""
+
+    def __init__(self, mapping: Optional[Dict[str, Optional[str]]] = None,
+                 default: Optional[str] = None):
+        self._map: Dict[str, Optional[str]] = dict(mapping or {})
+        self._default = default
+
+    def node_of(self, group: str) -> Optional[str]:
+        return self._map.get(group, self._default)
+
+    def assign(self, group: str, node: Optional[str]) -> None:
+        self._map[group] = node
+
+    def nodes(self):
+        return sorted({n for n in list(self._map.values()) + [self._default]
+                       if n is not None})
+
+
 class WorkerTransport(abc.ABC):
     """Worker-process half of a process-mode transport.
 
-    Built once per worker incarnation (after the fork); owns the worker's
-    channel endpoints and whatever control plumbing the implementation
-    needs (the routed pipe pump, the socket listener/reader threads).
+    Built once per worker incarnation (in the worker process, from its
+    :class:`WorkerBootstrap`); owns the worker's channel endpoints and
+    whatever control plumbing the implementation needs (the routed pipe
+    pump, the socket listener/reader threads).
     """
 
     #: channel name -> endpoint for every channel touching this group
@@ -233,6 +318,7 @@ def process_transport_names():
 
 def _load():
     # import side-effect registration; lazy so local-only users never pay
+    # (socketmode registers both "socket" and "tcp" — the AF_INET family)
     if "routed" not in _REGISTRY:
         from repro.core.transport import routed, socketmode  # noqa: F401
 
@@ -245,10 +331,10 @@ def make_supervisor_transport(name: str, driver) -> SupervisorTransport:
     return _REGISTRY[name][0](driver)
 
 
-def make_worker_transport(name: str, engine, group: str, tr_conn
-                          ) -> WorkerTransport:
+def make_worker_transport(name: str, bootstrap: "WorkerBootstrap",
+                          group: str, tr_conn) -> WorkerTransport:
     _load()
     if name not in _REGISTRY:
         raise ValueError(f"unknown process transport {name!r} "
                          f"(have {transport_names()})")
-    return _REGISTRY[name][1](engine, group, tr_conn)
+    return _REGISTRY[name][1](bootstrap, group, tr_conn)

@@ -29,7 +29,6 @@ recovery resends the undone suffix (Alg 6/7).
 """
 from __future__ import annotations
 
-import threading
 from typing import Dict, List, Optional
 
 from repro.core.transport.base import (SupervisorTransport, WorkerTransport,
@@ -87,7 +86,7 @@ class RoutedWorker(WorkerTransport):
     a credit-blocked put (deliveries and credit grants keep flowing while
     the sender waits — no self-deadlock)."""
 
-    def __init__(self, engine, group: str, tr_conn):
+    def __init__(self, bootstrap, group: str, tr_conn):
         self.group = group
         self.conn = tr_conn
         self.stopped = False
@@ -96,8 +95,8 @@ class RoutedWorker(WorkerTransport):
         self.credits: Dict[str, int] = {}
         self._last_idle: Optional[dict] = None
         self.channels: Dict[str, Channel] = {}
-        groups = engine.pipeline.groups
-        for ch in engine.channels:
+        groups = bootstrap.groups
+        for ch in bootstrap.channels:
             send_in = groups.get(ch.send_op) == group
             rec_in = groups.get(ch.rec_op) == group
             if send_in and rec_in:
@@ -397,5 +396,5 @@ class RoutedSupervisor(SupervisorTransport):
 
 
 register_transport("routed", RoutedSupervisor,
-                   lambda engine, group, conn: RoutedWorker(engine, group,
-                                                            conn))
+                   lambda bootstrap, group, conn: RoutedWorker(
+                       bootstrap, group, conn))

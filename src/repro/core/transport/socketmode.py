@@ -1,10 +1,21 @@
-"""The ``socket`` transport: direct worker-to-worker channels.
+"""The ``socket`` / ``tcp`` transports: direct worker-to-worker channels.
 
 Event payloads travel on point-to-point sockets between worker processes
-(`multiprocessing.connection` over ``AF_UNIX``, one duplex connection per
-sender-group -> receiver-group pair, channels multiplexed by name); the
-supervisor never touches an event.  It retains only the authoritative
-*recovery* view: the log.  The **sender-side worker holds the reliable
+(`multiprocessing.connection`, one duplex connection per sender-group ->
+receiver-group pair, channels multiplexed by name); the supervisor never
+touches an event.  The listener **family is per-engine configuration**
+(``transport_options={"family": "unix" | "inet"}``), not an import-time
+constant: ``socket`` defaults to ``AF_UNIX`` where available, and the
+registered ``tcp`` transport is the same implementation pinned to
+``AF_INET`` — ``(host, port)`` listener addresses brokered through the
+supervisor, so workers need not share a filesystem (the multi-host
+prerequisite).  Every connection — worker listener accept and peer dial —
+is authenticated with the engine's per-run ``authkey`` (the
+``multiprocessing.connection`` HMAC challenge), because a TCP listener is
+reachable by anything on the network, unlike a mode-0600 unix socket.
+
+The supervisor retains only the authoritative *recovery* view: the log.
+The **sender-side worker holds the reliable
 buffer** for each of its channels, bounded at the credit window (= the
 channel capacity): ``put`` appends + transmits and blocks while the buffer
 is full; the receiver's ``ack``/``release`` frames returning over the
@@ -47,16 +58,37 @@ buffers empty" covers the wire.
 from __future__ import annotations
 
 import os
+import socket as _socket
 import threading
 import time
+from multiprocessing import AuthenticationError
 from multiprocessing import connection as mpc
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.transport.base import (SupervisorTransport, WorkerTransport,
-                                       register_transport)
+from repro.core.transport.base import (SupervisorTransport, WorkerBootstrap,
+                                       WorkerTransport, register_transport)
 from repro.core.transport.local import Channel
 
-_FAMILY = "AF_UNIX" if hasattr(__import__("socket"), "AF_UNIX") else "AF_INET"
+
+def default_family() -> str:
+    """Platform default for the ``socket`` transport (``tcp`` always
+    resolves to ``inet``)."""
+    return "unix" if hasattr(_socket, "AF_UNIX") else "inet"
+
+
+def _listener_for(options: Dict) -> mpc.Listener:
+    """A fresh worker listener per the engine's transport options —
+    family is per-engine config (testable AF_INET on hosts that also have
+    AF_UNIX), never an import-time constant."""
+    family = options.get("family") or default_family()
+    authkey = options.get("authkey")
+    if family == "inet":
+        host = options.get("host", "127.0.0.1")
+        return mpc.Listener((host, 0), family="AF_INET", authkey=authkey)
+    if family == "unix":
+        return mpc.Listener(family="AF_UNIX", authkey=authkey)
+    raise ValueError(f"unknown socket family {family!r} "
+                     "(expected 'unix' or 'inet')")
 
 
 class _Conn:
@@ -220,9 +252,11 @@ class SocketRecvChannel(Channel):
 # ---------------------------------------------------------------------------
 
 class SocketWorker(WorkerTransport):
-    def __init__(self, engine, group: str, tr_conn):
+    def __init__(self, bootstrap: WorkerBootstrap, group: str, tr_conn):
         self.group = group
         self.conn = tr_conn
+        self.options = dict(bootstrap.transport_options)
+        self.authkey = self.options.get("authkey")
         self.stopped = False
         self._force = False
         self._reg = threading.Lock()       # conn registries + peer addrs
@@ -242,8 +276,8 @@ class SocketWorker(WorkerTransport):
         self._recv_chs: Dict[str, SocketRecvChannel] = {}
         self._local_chs: Dict[str, Channel] = {}
         self._peer_of: Dict[str, str] = {}         # channel -> peer group
-        groups = engine.pipeline.groups
-        for ch in engine.channels:
+        groups = bootstrap.groups
+        for ch in bootstrap.channels:
             send_in = groups.get(ch.send_op) == group
             rec_in = groups.get(ch.rec_op) == group
             if send_in and rec_in:
@@ -266,7 +300,7 @@ class SocketWorker(WorkerTransport):
         self._out: Dict[str, _Conn] = {}           # peer group -> conn
         self._in: Dict[str, _Conn] = {}
         self._peer_addr: Dict[str, Tuple] = {}     # peer -> (addr, gen)
-        self.listener = mpc.Listener(family=_FAMILY)
+        self.listener = _listener_for(self.options)
         threading.Thread(target=self._accept_loop, daemon=True,
                          name=f"sock-accept-{group}").start()
         threading.Thread(target=self._control_loop, daemon=True,
@@ -296,8 +330,20 @@ class SocketWorker(WorkerTransport):
             try:
                 c = self.listener.accept()
                 hello = c.recv()
+            except AuthenticationError:
+                continue                  # wrong/missing authkey: reject
             except (OSError, EOFError):
-                return                    # listener closed (stop)
+                if self.stopped:
+                    return                # listener closed (stop)
+                # a peer was SIGKILLed mid-handshake (the authkey
+                # challenge adds blocking round-trips inside accept());
+                # the listener itself is fine — a dead accept loop would
+                # leave this worker unreachable and strand the next
+                # connector inside its answer_challenge forever.  The
+                # brief sleep bounds the spin if accept() itself fails
+                # persistently (EMFILE, broken listener)
+                time.sleep(0.01)
+                continue
             if not (isinstance(hello, tuple) and hello[0] == "hello"):
                 c.close()
                 continue
@@ -364,9 +410,9 @@ class SocketWorker(WorkerTransport):
                 return                     # duplicate broadcast
             self._peer_addr[peer] = (addr, gen)
         try:
-            c = mpc.Client(addr)
+            c = mpc.Client(addr, authkey=self.authkey)
             c.send(("hello", self.group))
-        except (OSError, EOFError):
+        except (OSError, EOFError, AuthenticationError):
             return      # peer died again; a newer broadcast will follow
         entry = _Conn(c)
         with self._reg:
@@ -628,6 +674,20 @@ class SocketSupervisor(SupervisorTransport):
         return False
 
 
+class TcpSupervisor(SocketSupervisor):
+    """``transport="tcp"``: the socket transport pinned to the ``AF_INET``
+    listener family — ``(host, port)`` addresses brokered between workers
+    that need not share a filesystem or a parent process.  The supervisor
+    half is address-family-agnostic (addresses are opaque to the broker);
+    only the name differs so CI matrices and engine config can select the
+    family explicitly."""
+
+    name = "tcp"
+
+
 register_transport("socket", SocketSupervisor,
-                   lambda engine, group, conn: SocketWorker(engine, group,
-                                                            conn))
+                   lambda bootstrap, group, conn: SocketWorker(
+                       bootstrap, group, conn))
+register_transport("tcp", TcpSupervisor,
+                   lambda bootstrap, group, conn: SocketWorker(
+                       bootstrap, group, conn))

@@ -51,23 +51,27 @@ def store_spec(request):
 # selected by the LOGIO_TRANSPORT env var — the CI matrix axis, mirroring
 # LOGIO_STORE_SPEC:
 #
-#   unset / "all"     -> routed AND socket (full local default)
+#   unset             -> routed AND socket (fast local default; tcp-family
+#                        coverage always runs via tests/test_multihost.py)
+#   "all"             -> routed, socket AND tcp (nightly cross)
 #   "routed"          -> the supervisor-pumped pipe transport only
-#   "socket"          -> the direct worker<->worker socket transport only
+#   "socket"          -> the direct worker<->worker AF_UNIX transport only
+#   "tcp"             -> the socket transport over AF_INET (host, port)
 #   anything else     -> comma list of literal transport names
 # ---------------------------------------------------------------------------
 
 _TRANSPORT_SETS = {
     "routed": ["routed"],
     "socket": ["socket"],
-    "all": ["routed", "socket"],
+    "tcp": ["tcp"],
+    "all": ["routed", "socket", "tcp"],
 }
 
 
 def active_transports():
     sel = os.environ.get("LOGIO_TRANSPORT", "").strip()
     if not sel:
-        return _TRANSPORT_SETS["all"]
+        return ["routed", "socket"]
     if sel in _TRANSPORT_SETS:
         return _TRANSPORT_SETS[sel]
     return [t.strip() for t in sel.split(",") if t.strip()]
@@ -77,4 +81,53 @@ def active_transports():
 def proc_transport(request):
     """Process-mode transport name — the recovery guarantees must be
     oblivious to how events move between workers."""
+    return request.param
+
+
+# ---------------------------------------------------------------------------
+# Process-context matrix: process-mode tests run under the worker start
+# methods selected by the LOGIO_PROC_CTX env var, mirroring LOGIO_TRANSPORT:
+#
+#   unset             -> fork where available, else spawn (fast local
+#                        default; spawn coverage always runs via
+#                        tests/test_multihost.py)
+#   "all"             -> fork AND spawn (nightly runs the full
+#                        fork x spawn x routed/socket/tcp cross)
+#   "fork" / "spawn"  -> that start method only
+#   anything else     -> comma list of literal start-method names
+#
+# spawn workers are rebuilt purely from the picklable WorkerBootstrap
+# payload + the log — no fork inheritance — so this axis proves the
+# recovery guarantees hold for workers started from durable state alone.
+# ---------------------------------------------------------------------------
+
+_CTX_SETS = {
+    "fork": ["fork"],
+    "spawn": ["spawn"],
+    "all": ["fork", "spawn"],
+}
+
+
+def active_ctxs():
+    import multiprocessing
+    avail = multiprocessing.get_all_start_methods()
+    sel = os.environ.get("LOGIO_PROC_CTX", "").strip()
+    if not sel:
+        return ["fork"] if "fork" in avail else ["spawn"]
+    if sel == "all":
+        # "whatever this platform has" — filtering is correct here
+        return [c for c in _CTX_SETS["all"] if c in avail] or ["spawn"]
+    if sel in _CTX_SETS:
+        return _CTX_SETS[sel]
+    return [c.strip() for c in sel.split(",") if c.strip()]
+
+
+@pytest.fixture(params=active_ctxs())
+def proc_ctx(request):
+    """Process-mode worker start method (fork/spawn).  An explicitly
+    requested method that this platform lacks skips loudly — a cell
+    labeled fork must never silently go green by running spawn."""
+    import multiprocessing
+    if request.param not in multiprocessing.get_all_start_methods():
+        pytest.skip(f"start method {request.param!r} unavailable here")
     return request.param

@@ -1,13 +1,44 @@
-"""Shared pipeline builders + expectations for the test suite."""
+"""Shared pipeline builders + expectations for the test suite.
+
+Every factory here is built from module-level callables and
+``functools.partial`` — no closures — so the pipelines are picklable and
+work under ``Engine(mode="process", ctx="spawn")`` and on cluster node
+agents, where the worker bootstrap payload crosses process boundaries by
+pickle instead of fork inheritance.
+"""
 from __future__ import annotations
 
 import os
 import tempfile
+from functools import partial
 
 from repro.core import (CountWindowOperator, Engine, GeneratorSource,
                         MapOperator, Pipeline, ReadSource, SyncJoinOperator,
                         TerminalSink)
 from repro.core.logstore import build_store
+
+
+# -- picklable operator functions (spawn-safe: no lambdas/closures) ---------
+
+def double_v(b):
+    return {"v": b["v"] * 2}
+
+
+def win_sum(bs):
+    return {"s": sum(b["v"] for b in bs)}
+
+
+def _fast_fn(b):
+    return {"v": b["v"] + 1}
+
+
+def _slow_fn(b):
+    return {"v": b["v"] * 10}
+
+
+def _join_agg(a, b):
+    return {"sa": sum(x["v"] for x in a),
+            "sb": sum(x["v"] for x in b)}
 
 
 def mk_store(spec: str, **kw):
@@ -73,14 +104,13 @@ def linear_pipeline(n_events: int = 20, window: int = 4,
     """src -> map(x2) -> win(sum of window) -> sink."""
     def build():
         p = Pipeline()
-        p.add(lambda: GeneratorSource(
-            "src", ReadSource([{"v": i} for i in range(n_events)]),
-            rate=rate))
-        p.add(lambda: MapOperator("map", fn=lambda b: {"v": b["v"] * 2}))
-        p.add(lambda: CountWindowOperator(
-            "win", window, agg=lambda bs: {"s": sum(b["v"] for b in bs)},
-            writes_per_output=writes))
-        p.add(lambda: TerminalSink("sink", target=sink_target))
+        p.add(partial(GeneratorSource, "src",
+                      ReadSource([{"v": i} for i in range(n_events)]),
+                      rate=rate))
+        p.add(partial(MapOperator, "map", fn=double_v))
+        p.add(partial(CountWindowOperator, "win", window, agg=win_sum,
+                      writes_per_output=writes))
+        p.add(partial(TerminalSink, "sink", target=sink_target))
         p.connect("src", "out", "map", "in")
         p.connect("map", "out", "win", "in")
         p.connect("win", "out", "sink", "in")
@@ -96,15 +126,12 @@ def diamond_pipeline(n_events: int = 30, n1: int = 6, n2: int = 3,
     (UC2 topology)."""
     def build():
         p = Pipeline()
-        p.add(lambda: GeneratorSource(
-            "src", ReadSource([{"v": i} for i in range(n_events)])))
-        p.add(lambda: MapOperator("fast", fn=lambda b: {"v": b["v"] + 1}))
-        p.add(lambda: MapOperator("slow", fn=lambda b: {"v": b["v"] * 10}))
-        p.add(lambda: SyncJoinOperator(
-            "join", n1, n2,
-            agg=lambda a, b: {"sa": sum(x["v"] for x in a),
-                              "sb": sum(x["v"] for x in b)}))
-        p.add(lambda: TerminalSink("sink", target=sink_target))
+        p.add(partial(GeneratorSource, "src",
+                      ReadSource([{"v": i} for i in range(n_events)])))
+        p.add(partial(MapOperator, "fast", fn=_fast_fn))
+        p.add(partial(MapOperator, "slow", fn=_slow_fn))
+        p.add(partial(SyncJoinOperator, "join", n1, n2, agg=_join_agg))
+        p.add(partial(TerminalSink, "sink", target=sink_target))
         p.connect("src", "out", "fast", "in")
         p.connect("src", "out", "slow", "in")
         p.connect("fast", "out", "join", "in1")

@@ -3,7 +3,7 @@ pipeline in process mode on a durable sqlite-family store until the parent
 test SIGKILLs this whole process tree mid-run.
 
 Usage: python tests/kill9_runner.py <store_spec> <db_path> <external_path>
-                                    [transport]
+                                    [transport] [ctx]
 (The parent sets PYTHONPATH so ``repro`` and ``tests`` import.)
 """
 import sys
@@ -16,6 +16,7 @@ from tests.helpers import FileExternalSystem, linear_pipeline
 def main():
     spec, db_path, ext_path = sys.argv[1], sys.argv[2], sys.argv[3]
     transport = sys.argv[4] if len(sys.argv) > 4 else "routed"
+    ctx = sys.argv[5] if len(sys.argv) > 5 else None
     build, _expected = linear_pipeline(writes=1, rate=0.01)
     # no time-based flushing: whatever the watermark has not flushed when
     # the SIGKILL lands is a genuinely unflushed (or uncommitted) epoch
@@ -23,7 +24,7 @@ def main():
                         interval=60.0)
     eng = Engine(build(), mode="process", store=store,
                  external=FileExternalSystem(ext_path),
-                 transport=transport, restart_delay=0.01)
+                 transport=transport, ctx=ctx, restart_delay=0.01)
     eng.start()
     print("READY", flush=True)
     eng.wait(60)

@@ -1,0 +1,246 @@
+"""Multi-host process mode: spawn-safe worker bootstrap, the TCP channel
+family, and the LocalCluster node-agent harness.
+
+These tests always run, independent of the LOGIO_PROC_CTX/LOGIO_TRANSPORT
+matrix axes: they pin the multi-host path specifically — workers started
+under the ``spawn`` context (or by node agents) are rebuilt purely from
+the picklable :class:`WorkerBootstrap` payload + the shared log, and their
+channels ride authkey-authenticated ``AF_INET`` sockets brokered as
+``(host, port)`` tuples.  No fork inheritance anywhere.
+"""
+import pickle
+import time
+from multiprocessing import AuthenticationError
+from multiprocessing import connection as mpc
+
+import pytest
+
+from repro.core import Engine, FailureInjector, LocalCluster, Placement
+from repro.core.scaling import Controller
+from tests.helpers import linear_pipeline, mk_store, sink_outputs
+from tests.test_process_mode import _mk_replica, _replica_pipeline
+
+# cluster boots + eng.wait budgets exceed the global 120s pytest-timeout;
+# 300s still catches genuine hangs well inside the CI job timeout
+pytestmark = pytest.mark.timeout(300)
+
+
+def _mk(spec="sqlite+group"):
+    return mk_store(spec, shards=3, batch_size=4, interval=0.001)
+
+
+# ---------------------------------------------------------------------------
+# units: placement + bootstrap payload
+# ---------------------------------------------------------------------------
+
+def test_placement_units():
+    p = Placement({"a": "n0", "b": None}, default="n1")
+    assert p.node_of("a") == "n0"
+    assert p.node_of("b") is None
+    assert p.node_of("zzz") == "n1"        # default applies to unknowns
+    p.assign("c", "n2")
+    assert p.node_of("c") == "n2"
+    assert p.nodes() == ["n0", "n1", "n2"]
+    assert Placement().node_of("anything") is None
+    assert Placement().nodes() == []
+
+
+def test_bootstrap_payload_is_picklable_and_complete():
+    """The whole point of the bootstrap: it crosses process boundaries by
+    stdlib pickle and carries everything a worker rebuild needs."""
+    build, _ = linear_pipeline(writes=1)
+    eng = Engine(build(), mode="process", transport="tcp",
+                 store=mk_store("memory"))
+    try:
+        bs = eng.make_bootstrap("map", recover=True, incarnation=7)
+        bs2 = pickle.loads(pickle.dumps(bs))
+        assert bs2.group == "map" and bs2.incarnation == 7 and bs2.recover
+        assert bs2.group_ops() == ["map"]
+        assert set(bs2.factories) == {"map"}     # only this group's ops
+        op = bs2.factories["map"]()              # rebuilds a live operator
+        assert op.id == "map"
+        names = {c.name for c in bs2.channels}
+        assert "src.out->map.in" in names and "map.out->win.in" in names
+        assert all(c.capacity > 0 for c in bs2.channels)
+        assert bs2.transport == "tcp"
+        assert bs2.transport_options["family"] == "inet"
+        assert isinstance(bs2.transport_options["authkey"], bytes)
+    finally:
+        eng.stop()
+
+
+def test_socket_family_is_per_engine_config():
+    """The family is engine configuration, not an import-time constant:
+    AF_INET must be selectable (and work) on a host that also has
+    AF_UNIX, and two engines with different families can coexist."""
+    build, expected = linear_pipeline(writes=1)
+    eng = Engine(build(), mode="process", transport="socket",
+                 transport_options={"family": "inet"}, store=_mk())
+    eng.start()
+    ok = eng.wait(60)
+    eng.stop()
+    assert ok and sink_outputs(eng) == expected
+    # transport="tcp" is the same selection spelled as a transport name
+    eng2 = Engine(linear_pipeline(writes=1)[0](), mode="process",
+                  transport="tcp", store=mk_store("memory"))
+    assert eng2.transport_options["family"] == "inet"
+    eng2.stop()
+    with pytest.raises(ValueError):
+        Engine(linear_pipeline()[0](), mode="process", transport="socket",
+               transport_options={"family": "bogus"})
+
+
+# ---------------------------------------------------------------------------
+# spawn + AF_INET recovery: reconnect-replay and obsolete-filter correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op_id,point,nth", [
+    ("map", "post_send", 1),       # sender dies: buffer rebuilt from log
+    ("win", "post_ack_log", 2),    # receiver dies: reconnect + resend,
+                                   # obsolete filter drops the recovered
+                                   # prefix
+])
+def test_spawn_tcp_sigkill_recovery(op_id, point, nth):
+    """SIGKILL a spawn-context worker mid-protocol over AF_INET channels:
+    the respawned worker is rebuilt purely from bootstrap + log (no fork
+    inheritance exists under spawn), senders re-transmit their reliable
+    buffers on reconnect, and the obsolete filter keeps the output
+    exactly-once."""
+    build, expected = linear_pipeline(writes=1)
+    inj = FailureInjector([(op_id, point, nth)])
+    eng = Engine(build(), mode="process", ctx="spawn", transport="tcp",
+                 store=_mk(), injector=inj, restart_delay=0.02)
+    eng.start()
+    ok = eng.wait(90)
+    eng.stop()
+    assert ok, (op_id, point)
+    assert eng.failures == 1, (op_id, point)
+    assert sink_outputs(eng) == expected       # no duplicates, no holes
+
+
+def test_spawn_tcp_midstream_kill_reconnect_replay():
+    """Kill a spawn worker mid-stream (not at an injected point): the
+    sender's buffered events for the dead receiver are re-transmitted to
+    its fresh AF_INET listener and filtered exactly-once."""
+    build, expected = linear_pipeline(n_events=200, window=4,
+                                      sink_target=50, writes=1, rate=0.005)
+    eng = Engine(build(), mode="process", ctx="spawn", transport="tcp",
+                 store=_mk("sqlite+sharded+group"), restart_delay=0.05)
+    eng.start()
+    deadline = time.time() + 30.0
+    while eng.process_stats().get("win", 0) < 20:
+        assert time.time() < deadline, "pipeline never reached steady state"
+        time.sleep(0.01)
+    eng.kill_group("win")
+    ok = eng.wait(120)
+    eng.stop()
+    assert ok
+    assert eng.failures >= 1
+    assert sink_outputs(eng) == expected
+
+
+# ---------------------------------------------------------------------------
+# LocalCluster: node agents, bootstrap-only workers, whole-node death
+# ---------------------------------------------------------------------------
+
+def _cluster_engine(build, *, store, n_nodes=2, placement=None, **kw):
+    cluster = LocalCluster(n_nodes)
+    placement = placement or {"src": "node0", "map": "node0",
+                              "win": "node1", "sink": "node1"}
+    eng = Engine(build(), mode="process", ctx="spawn", transport="tcp",
+                 store=store, cluster=cluster, placement=placement, **kw)
+    return eng, cluster
+
+
+def test_localcluster_bootstrap_only_recovery_matches_thread_mode():
+    """The acceptance claim: a worker rebuilt purely from the bootstrap
+    payload + log — launched by a node agent, crashed with SIGKILL,
+    relaunched by the agent — recovers to exactly the output thread mode
+    produces."""
+    build, expected = linear_pipeline(writes=1)
+    ref = Engine(build(), mode="thread", store=mk_store("memory"))
+    ref.start()
+    assert ref.wait(60)
+    ref.stop()
+
+    inj = FailureInjector([("win", "post_log", 2)])
+    eng, _cluster = _cluster_engine(build, store=_mk(), injector=inj,
+                                    restart_delay=0.02)
+    eng.start()
+    ok = eng.wait(120)
+    eng.stop()
+    assert ok
+    assert eng.failures == 1
+    assert sink_outputs(eng) == sink_outputs(ref) == expected
+
+
+def test_localcluster_rejects_unauthenticated_control_connections():
+    """The control hub (and every worker listener) runs the mpc authkey
+    challenge: a client with the wrong key never gets a connection."""
+    build, expected = linear_pipeline(writes=1)
+    eng, _cluster = _cluster_engine(build, store=_mk())
+    eng.start()
+    try:
+        addr = eng._proc._hub.address
+        with pytest.raises(AuthenticationError):
+            mpc.Client(addr, authkey=b"wrong-key")
+        ok = eng.wait(120)     # the rejected probe must not disturb the run
+    finally:
+        eng.stop()
+    assert ok and sink_outputs(eng) == expected
+
+
+def test_localcluster_kill_node_nonblocking():
+    """Pull the plug on one node (SIGKILL of its agent's whole process
+    group): the other node's workers keep processing while the dead
+    node's groups warm-restart on a fresh agent — the paper's
+    non-blocking recovery across node boundaries."""
+    build, expected = linear_pipeline(n_events=200, window=4,
+                                      sink_target=50, writes=1, rate=0.005)
+    eng, cluster = _cluster_engine(build, store=_mk("sqlite+sharded+group"),
+                                   restart_delay=0.3)
+    eng.start()
+    deadline = time.time() + 30.0
+    while eng.process_stats().get("sink", 0) < 5:
+        assert time.time() < deadline, "pipeline never reached steady state"
+        time.sleep(0.01)
+    before = eng.process_stats().get("src", 0)
+    cluster.kill_node("node1")                 # win + sink die with it
+    assert cluster.wait_node_dead("node1")
+    # node0's source must advance while node1 is down
+    probe_deadline = time.time() + 1.0
+    during = before
+    while during <= before and time.time() < probe_deadline:
+        during = eng.process_stats().get("src", 0)
+        time.sleep(0.005)
+    ok = eng.wait(150)
+    eng.stop()
+    assert ok, "run did not complete after node death"
+    assert during > before, "source stalled while node1 was down"
+    assert eng.failures >= 2                   # both of node1's groups
+    assert sink_outputs(eng) == expected       # exactly-once across nodes
+
+
+def test_localcluster_scale_up_across_nodes():
+    """Dynamic scaling lands new replicas on other nodes: place r2 on
+    node1 before scale_up, then scale r1 away — Algorithms 12-13 against
+    node-agent workers."""
+    n = 60
+    placement = {"src": "node0", "disp": "node0", "r0": "node0",
+                 "r1": "node1", "mrg": "node1", "sink": "node1"}
+    cluster = LocalCluster(2)
+    eng = Engine(_replica_pipeline(n)(), mode="process", ctx="spawn",
+                 transport="tcp", cluster=cluster, placement=placement,
+                 restart_delay=0.02)
+    ctrl = Controller(eng, "disp", "mrg", replica_factory=_mk_replica)
+    eng.start()
+    time.sleep(0.5)
+    eng.placement.assign("r2", "node1")
+    ctrl.scale_up("r2")
+    time.sleep(0.5)
+    ctrl.scale_down("r1")
+    ok = eng.wait(150)
+    eng.stop()
+    assert ok
+    assert sorted(b["v"] for b in eng.external.committed()) == \
+        sorted(2 * i for i in range(n))

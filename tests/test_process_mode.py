@@ -8,25 +8,26 @@ worker (the injector RPC answers ``("crash",)`` and the worker SIGKILLs
 itself), so this matrix exercises the recovery algorithms across actual
 process death — volatile state loss is enforced by the OS, not simulated.
 """
-import multiprocessing
 import os
 import signal
 import sqlite3
 import subprocess
 import sys
 import time
+from functools import partial
 
 import pytest
 
 from repro.core import (Engine, FailureInjector, GeneratorSource,
                         MapOperator, Pipeline, ReadSource, TerminalSink)
 from repro.core.scaling import Controller, DispatcherOperator, MergerOperator
-from tests.helpers import (FileExternalSystem, linear_pipeline, mk_store,
-                           sink_outputs)
+from tests.helpers import (FileExternalSystem, double_v, linear_pipeline,
+                           mk_store, sink_outputs)
 
-pytestmark = pytest.mark.skipif(
-    "fork" not in multiprocessing.get_all_start_methods(),
-    reason="process mode forks workers")
+# several tests here budget waits beyond the global 120s pytest-timeout
+# (boot polling + eng.wait(90..150) on loaded runners); 300s still fails a
+# genuine hang long before the 30-minute job timeout
+pytestmark = pytest.mark.timeout(300)
 
 # the sqlite family is the deployment target: one durable store shared by
 # every worker process (plain, group-commit, and sharded+group with the
@@ -39,10 +40,10 @@ def _mk(spec):
 
 
 def _run(build, expected, spec, plan, timeout=60.0, require_fired=True,
-         transport="routed"):
+         transport="routed", ctx=None):
     inj = FailureInjector(plan)
     eng = Engine(build(), mode="process", store=_mk(spec), injector=inj,
-                 transport=transport, restart_delay=0.02)
+                 transport=transport, ctx=ctx, restart_delay=0.02)
     eng.start()
     ok = eng.wait(timeout)
     eng.stop()
@@ -74,10 +75,11 @@ MATRIX = [
 
 @pytest.mark.parametrize("spec", SQLITE_SPECS)
 @pytest.mark.parametrize("op_id,point,nth", MATRIX)
-def test_sigkill_recovery_matrix(op_id, point, nth, spec, proc_transport):
+def test_sigkill_recovery_matrix(op_id, point, nth, spec, proc_transport,
+                                 proc_ctx):
     build, expected = linear_pipeline(writes=1)
     _run(build, expected, spec, [(op_id, point, nth)],
-         transport=proc_transport)
+         transport=proc_transport, ctx=proc_ctx)
 
 
 @pytest.mark.slow
@@ -88,26 +90,27 @@ def test_sigkill_recovery_matrix(op_id, point, nth, spec, proc_transport):
                                    "post_ack_log", "pre_log", "post_log",
                                    "post_send", "pre_write",
                                    "post_write_pre_done"])
-def test_sigkill_recovery_matrix_full(op_id, point, spec, proc_transport):
+def test_sigkill_recovery_matrix_full(op_id, point, spec, proc_transport,
+                                      proc_ctx):
     """Nightly: the full crash-point matrix under real process death.
     Combos whose point never fires for that operator (e.g. a map has no
     write actions) degenerate to failure-free runs, as in the step-mode
     matrix."""
     build, expected = linear_pipeline(writes=1)
     _run(build, expected, spec, [(op_id, point, 2)], require_fired=False,
-         transport=proc_transport)
+         transport=proc_transport, ctx=proc_ctx)
 
 
-def test_multiple_worker_kills(store_spec, proc_transport):
+def test_multiple_worker_kills(store_spec, proc_transport, proc_ctx):
     """Two distinct groups SIGKILL'd in one run (Case 3 of the proof),
     against the LOGIO_STORE_SPEC-selected backends."""
     build, expected = linear_pipeline(writes=1)
     _run(build, expected, store_spec,
          [("map", "post_ack_log", 2), ("win", "pre_log", 1)],
-         transport=proc_transport)
+         transport=proc_transport, ctx=proc_ctx)
 
 
-def test_nonblocking_recovery_other_groups_advance(proc_transport):
+def test_nonblocking_recovery_other_groups_advance(proc_transport, proc_ctx):
     """Kill one group mid-stream; the other workers keep processing while
     it restarts (the paper's non-blocking property across processes). The
     credit windows (default channel capacity) absorb the burst, so the
@@ -115,9 +118,14 @@ def test_nonblocking_recovery_other_groups_advance(proc_transport):
     build, expected = linear_pipeline(n_events=200, window=4,
                                       sink_target=50, writes=1, rate=0.005)
     eng = Engine(build(), mode="process", store=_mk("sqlite+sharded+group"),
-                 transport=proc_transport, restart_delay=0.3)
+                 transport=proc_transport, ctx=proc_ctx, restart_delay=0.3)
     eng.start()
-    time.sleep(0.3)
+    # wait for steady state first: spawn-context workers boot a fresh
+    # interpreter each, so a fixed post-start sleep is ctx-dependent
+    boot_deadline = time.time() + 30.0
+    while eng.process_stats().get("src", 0) < 10:
+        assert time.time() < boot_deadline, "pipeline never started"
+        time.sleep(0.01)
     before = eng.process_stats().get("src", 0)
     eng.kill_group("win")
     # poll inside the restart_delay window (win is down): the source must
@@ -135,18 +143,21 @@ def test_nonblocking_recovery_other_groups_advance(proc_transport):
     assert sink_outputs(eng) == expected
 
 
+def _mk_replica(rid):
+    """Picklable replica factory (spawn-safe) for the scaling tests."""
+    return partial(MapOperator, rid, fn=double_v, processing_time=0.004)
+
+
 def _replica_pipeline(n):
     def build():
         p = Pipeline()
-        p.add(lambda: GeneratorSource(
-            "src", ReadSource([{"v": i} for i in range(n)]), rate=0.002))
-        p.add(lambda: DispatcherOperator("disp", ["r0", "r1"]))
-        p.add(lambda: MapOperator("r0", fn=lambda b: {"v": b["v"] * 2},
-                                  processing_time=0.004))
-        p.add(lambda: MapOperator("r1", fn=lambda b: {"v": b["v"] * 2},
-                                  processing_time=0.004))
-        p.add(lambda: MergerOperator("mrg", ["r0", "r1"]))
-        p.add(lambda: TerminalSink("sink", target=n))
+        p.add(partial(GeneratorSource, "src",
+                      ReadSource([{"v": i} for i in range(n)]), rate=0.002))
+        p.add(partial(DispatcherOperator, "disp", ["r0", "r1"]))
+        p.add(_mk_replica("r0"))
+        p.add(_mk_replica("r1"))
+        p.add(partial(MergerOperator, "mrg", ["r0", "r1"]))
+        p.add(partial(TerminalSink, "sink", target=n))
         p.connect("src", "out", "disp", "in")
         p.connect("disp", "to_r0", "r0", "in")
         p.connect("disp", "to_r1", "r1", "in")
@@ -157,18 +168,15 @@ def _replica_pipeline(n):
     return build
 
 
-def test_scaling_on_live_workers(proc_transport):
+def test_scaling_on_live_workers(proc_transport, proc_ctx):
     """Algorithms 12-13 against live worker processes: scale up a new
     replica process mid-run, then scale one down; replicas + source + sink
     keep their processes throughout. The transports re-grant / rebuild the
     credit windows of the rewired channels on replica add/remove."""
     n = 60
     eng = Engine(_replica_pipeline(n)(), mode="process",
-                 transport=proc_transport, restart_delay=0.02)
-    ctrl = Controller(
-        eng, "disp", "mrg",
-        replica_factory=lambda rid: (lambda: MapOperator(
-            rid, fn=lambda b: {"v": b["v"] * 2}, processing_time=0.004)))
+                 transport=proc_transport, ctx=proc_ctx, restart_delay=0.02)
+    ctrl = Controller(eng, "disp", "mrg", replica_factory=_mk_replica)
     eng.start()
     time.sleep(0.3)
     ctrl.scale_up("r2")
@@ -180,16 +188,13 @@ def test_scaling_on_live_workers(proc_transport):
         sorted(2 * i for i in range(n))
 
 
-def test_scaling_with_worker_kill(proc_transport):
+def test_scaling_with_worker_kill(proc_transport, proc_ctx):
     """A replica worker SIGKILL'd while another is being scaled in."""
     n = 60
     inj = FailureInjector([("r0", "post_log", 3)])
     eng = Engine(_replica_pipeline(n)(), mode="process", injector=inj,
-                 transport=proc_transport, restart_delay=0.02)
-    ctrl = Controller(
-        eng, "disp", "mrg",
-        replica_factory=lambda rid: (lambda: MapOperator(
-            rid, fn=lambda b: {"v": b["v"] * 2}, processing_time=0.004)))
+                 transport=proc_transport, ctx=proc_ctx, restart_delay=0.02)
+    ctrl = Controller(eng, "disp", "mrg", replica_factory=_mk_replica)
     eng.start()
     time.sleep(0.25)
     ctrl.scale_up("r2")
@@ -229,7 +234,8 @@ def _shard_files(db_path, spec):
 @pytest.mark.parametrize("kill_after", [0.25, 0.6])
 def test_kill9_whole_engine_loses_exactly_unflushed_epoch(spec, kill_after,
                                                           tmp_path,
-                                                          proc_transport):
+                                                          proc_transport,
+                                                          proc_ctx):
     db_path = str(tmp_path / "log.db")
     ext_path = str(tmp_path / "external.bin")
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -239,7 +245,7 @@ def test_kill9_whole_engine_loses_exactly_unflushed_epoch(spec, kill_after,
         + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
     proc = subprocess.Popen(
         [sys.executable, os.path.join(repo_root, "tests", "kill9_runner.py"),
-         spec, db_path, ext_path, proc_transport],
+         spec, db_path, ext_path, proc_transport, proc_ctx],
         stdout=subprocess.PIPE, env=env, start_new_session=True)
     try:
         assert proc.stdout.readline().strip() == b"READY"
@@ -273,7 +279,8 @@ def test_kill9_whole_engine_loses_exactly_unflushed_epoch(spec, kill_after,
     build, expected = linear_pipeline(writes=1, rate=0.01)
     eng = Engine(build(), mode="process", store=store,
                  external=FileExternalSystem(ext_path), resume=True,
-                 transport=proc_transport, restart_delay=0.01)
+                 transport=proc_transport, ctx=proc_ctx,
+                 restart_delay=0.01)
     eng.start()
     ok = eng.wait(90)
     eng.stop()
@@ -289,21 +296,25 @@ def test_kill9_whole_engine_loses_exactly_unflushed_epoch(spec, kill_after,
 # credit window instead of growing supervisor (or sender) memory.
 # ---------------------------------------------------------------------------
 
+def _ident(b):
+    return b
+
+
 def _bp_pipeline(n, window, sink_pt):
     def build():
         p = Pipeline()
-        p.add(lambda: GeneratorSource(
-            "src", ReadSource([{"v": i} for i in range(n)])))
-        p.add(lambda: MapOperator("map", fn=lambda b: b))
-        p.add(lambda: TerminalSink("sink", target=n,
-                                   processing_time=sink_pt))
+        p.add(partial(GeneratorSource, "src",
+                      ReadSource([{"v": i} for i in range(n)])))
+        p.add(partial(MapOperator, "map", fn=_ident))
+        p.add(partial(TerminalSink, "sink", target=n,
+                      processing_time=sink_pt))
         p.connect("src", "out", "map", "in", capacity=window)
         p.connect("map", "out", "sink", "in", capacity=window)
         return p
     return build
 
 
-def test_backpressure_bounds_buffers(proc_transport):
+def test_backpressure_bounds_buffers(proc_transport, proc_ctx):
     """Fast producer, slow consumer, tiny credit window: the supervisor's
     authoritative buffers never exceed the window (routed) / never hold an
     event at all (socket — payloads bypass the supervisor), and the run
@@ -311,7 +322,8 @@ def test_backpressure_bounds_buffers(proc_transport):
     import threading
     n, window = 120, 8
     eng = Engine(_bp_pipeline(n, window, 0.002)(), mode="process",
-                 transport=proc_transport, store=mk_store("memory"))
+                 transport=proc_transport, ctx=proc_ctx,
+                 store=mk_store("memory"))
     eng.start()
     peak = [0]
 
@@ -327,11 +339,12 @@ def test_backpressure_bounds_buffers(proc_transport):
     eng.stop()
     assert ok
     assert len(sink_outputs(eng)) == n
-    limit = 0 if proc_transport == "socket" else window
+    limit = 0 if proc_transport in ("socket", "tcp") else window
     assert peak[0] <= limit, (proc_transport, peak[0], window)
 
 
-def test_end_of_stream_force_drain_with_lazy_watermark(proc_transport):
+def test_end_of_stream_force_drain_with_lazy_watermark(proc_transport,
+                                                       proc_ctx):
     """Group-commit store whose tail batch would never flush on its own
     (huge batch, 60s interval): at end of stream the supervisor must
     detect quiescent-except-deferral — deferred acks keep their events in
@@ -340,6 +353,7 @@ def test_end_of_stream_force_drain_with_lazy_watermark(proc_transport):
     completes."""
     build, expected = linear_pipeline(writes=1)
     eng = Engine(build(), mode="process", transport=proc_transport,
+                 ctx=proc_ctx,
                  store=mk_store("sqlite+group", batch_size=100,
                                 interval=60.0))
     eng.start()
@@ -349,15 +363,15 @@ def test_end_of_stream_force_drain_with_lazy_watermark(proc_transport):
     assert sink_outputs(eng) == expected
 
 
-def test_blocked_sender_survives_receiver_sigkill(proc_transport):
+def test_blocked_sender_survives_receiver_sigkill(proc_transport, proc_ctx):
     """The producer is credit-blocked on a full window when its consumer
     group is SIGKILL'd; recovery resets the window (routed re-grants from
     the surviving buffer, socket re-transmits on reconnect) and the run
     completes — a killed receiver never strands a sender."""
     n, window = 80, 4
     eng = Engine(_bp_pipeline(n, window, 0.004)(), mode="process",
-                 transport=proc_transport, store=_mk("sqlite+group"),
-                 restart_delay=0.05)
+                 transport=proc_transport, ctx=proc_ctx,
+                 store=_mk("sqlite+group"), restart_delay=0.05)
     eng.start()
     # wait until the slow sink consumed a bit — the window is certainly
     # full and the upstream senders are blocked on credits

@@ -10,6 +10,7 @@ from repro.launch.train import run_training
 
 
 @pytest.mark.slow
+@pytest.mark.timeout(600)      # jax compile + two full training runs
 def test_bit_identical_resume(tmp_path):
     a = run_training(steps=10, ckpt_every=3, seq_len=64, batch_size=4,
                      ckpt_dir=str(tmp_path / "a"), d_model=64, n_layers=2,
@@ -30,6 +31,7 @@ def test_bit_identical_resume(tmp_path):
 
 
 @pytest.mark.slow
+@pytest.mark.timeout(600)      # jax compile + a full training run
 def test_worker_crash_nonblocking(tmp_path):
     out = run_training(steps=8, ckpt_every=4, seq_len=64, batch_size=4,
                        ckpt_dir=str(tmp_path / "w"), d_model=64, n_layers=2,
