@@ -1,15 +1,35 @@
 # The paper's primary contribution: LOG.io unified rollback recovery +
 # fine-grain data lineage capture for distributed data pipelines.
+#
+# ``__all__`` below is the CURATED PUBLIC SURFACE — the documented import
+# path (see docs/api.md) guarded by the API-snapshot test in
+# tests/test_config_api.py. Everything else imported here remains reachable
+# for backward compatibility, but internal modules are not the documented
+# way in.
+from repro.core.api import LogioAPI
 from repro.core.builtin import (CountWindowOperator, GeneratorSource,
                                 MapOperator, SyncJoinOperator, TerminalSink)
 from repro.core.cluster import LocalCluster
-from repro.core.engine import Engine, FailureInjector, Pipeline
+from repro.core.engine import Engine, FailureInjector, Pipeline, \
+    TransportConfig
 from repro.core.transport import Channel, ChannelClosed
 from repro.core.transport.base import Placement, WorkerBootstrap
 from repro.core.events import Event, ReadAction
 from repro.core.lineage import LineageScope, backward, enabled_ports, forward
 from repro.core.logstore import (GroupCommitStore, LogBackend, MemoryLogStore,
-                                 NullLogStore, ShardedLogStore, SqliteLogStore,
+                                 NullLogStore, SegmentLogStore,
+                                 ShardedLogStore, SqliteLogStore, StoreConfig,
                                  TxnAborted, build_store)
 from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
                                  ReadSource, SimulatedCrash)
+
+__all__ = [
+    "Engine",
+    "LocalCluster",
+    "LogioAPI",
+    "Pipeline",
+    "Placement",
+    "StoreConfig",
+    "TransportConfig",
+    "build_store",
+]

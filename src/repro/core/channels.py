@@ -1,7 +1,16 @@
-"""Compatibility shim — the channel implementation is now the ``local``
-transport (:mod:`repro.core.transport.local`); see
+"""DEPRECATED compatibility shim — the channel implementation is now the
+``local`` transport (:mod:`repro.core.transport.local`); see
 :mod:`repro.core.transport.base` for the formal interface and the credit
-protocol shared by all transports."""
+protocol shared by all transports. Importing this module warns; import
+from ``repro.core.transport.local`` (or the ``repro.core`` surface)
+instead."""
+import warnings
+
 from repro.core.transport.local import Channel, ChannelClosed
+
+warnings.warn(
+    "repro.core.channels is deprecated; import Channel/ChannelClosed from "
+    "repro.core.transport.local instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["Channel", "ChannelClosed"]

@@ -25,6 +25,7 @@ Three execution modes:
 from __future__ import annotations
 
 import collections
+import dataclasses
 import multiprocessing
 import os
 import threading
@@ -36,10 +37,45 @@ from repro.core.transport import Channel
 from repro.core.transport.base import (Placement, WorkerBootstrap,
                                        process_transport_names)
 from repro.core.lineage import LineageScope, enabled_ports
-from repro.core.logstore import LogBackend, MemoryLogStore, build_store
+from repro.core.logstore import (LogBackend, MemoryLogStore, StoreConfig,
+                                 build_store)
 from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
                                  SimulatedCrash)
 from repro.core.recovery import recover_operator
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    """Typed description of the event transport, replacing the stringly
+    ``transport=`` + ``transport_options={...}`` pair. ``name`` is
+    ``"local"`` (thread/step mode) or a process transport
+    (``"routed"``/``"socket"``/``"tcp"``); the remaining fields configure
+    the socket transports and are ignored by the others."""
+
+    name: str = "local"
+    family: Optional[str] = None        # "unix" | "inet" (socket only)
+    host: Optional[str] = None          # bind host (inet only)
+    authkey: Optional[bytes] = None     # peer-auth secret (per-run default)
+
+    def __post_init__(self):
+        valid = ("local",) + tuple(process_transport_names())
+        if self.name not in valid:
+            raise ValueError(f"unknown transport {self.name!r} "
+                             f"(expected one of {list(valid)})")
+        if self.family not in (None, "unix", "inet"):
+            raise ValueError(f"unknown socket family {self.family!r} "
+                             "(expected 'unix' or 'inet')")
+
+    def options(self) -> dict:
+        """The legacy ``transport_options`` dict this config describes."""
+        out: dict = {}
+        if self.family is not None:
+            out["family"] = self.family
+        if self.host is not None:
+            out["host"] = self.host
+        if self.authkey is not None:
+            out["authkey"] = self.authkey
+        return out
 
 
 class FailureInjector:
@@ -110,7 +146,7 @@ class Engine:
                  lineage_scopes: Sequence[LineageScope] = (),
                  injector: Optional[FailureInjector] = None,
                  mode: str = "thread",
-                 transport: Optional[str] = None,
+                 transport: Optional[Any] = None,
                  transport_options: Optional[dict] = None,
                  ctx: Optional[str] = None,
                  placement: Optional[Any] = None,
@@ -119,15 +155,19 @@ class Engine:
                  replay_ops: Sequence[str] = (),
                  abs_options: Optional[dict] = None,
                  resume: bool = False):
-        """``store`` is any :class:`LogBackend` (or a ``build_store`` spec
-        string like ``"memory+sharded+group"``). ``resume=True`` starts
+        """``store`` is any :class:`LogBackend`, a typed
+        :class:`~repro.core.logstore.StoreConfig`, or a ``build_store``
+        spec string like ``"memory+sharded+group"``. ``resume=True`` starts
         every operator in state "restarted" — warm restart of a whole
         pipeline against a recovered store (full-process crash).
-        ``transport`` selects the process-mode channel implementation
+        ``transport`` is a :class:`TransportConfig` or a transport name:
+        it selects the process-mode channel implementation
         (``"routed"``/``"socket"``/``"tcp"``); thread and step mode always
-        use the in-memory ``"local"`` transport.  ``transport_options``
-        configures the socket family (``{"family": "unix"|"inet"}``), bind
-        host and authkey.  ``ctx`` selects the worker start method
+        use the in-memory ``"local"`` transport.  The legacy
+        ``transport_options`` dict configures the socket family
+        (``{"family": "unix"|"inet"}``), bind host and authkey — with a
+        TransportConfig those knobs live in the config instead.  ``ctx``
+        selects the worker start method
         (``"fork"``/``"spawn"``): spawn workers are rebuilt purely from a
         picklable :class:`WorkerBootstrap` payload + the log, never from
         inherited parent memory — group factories must then be picklable.
@@ -137,6 +177,13 @@ class Engine:
         launches workers on those nodes."""
         self.pipeline = pipeline
         self._resume = resume
+        if isinstance(transport, TransportConfig):
+            if transport_options:
+                raise ValueError("pass socket options inside the "
+                                 "TransportConfig, not via "
+                                 "transport_options=")
+            transport_options = transport.options()
+            transport = transport.name
         if mode == "process":
             self.transport = transport or "routed"
             if self.transport not in process_transport_names():
@@ -185,7 +232,7 @@ class Engine:
         self.cluster = cluster
         if cluster is None and self.placement.nodes():
             raise ValueError("placement names nodes but no cluster= given")
-        if isinstance(store, str):
+        if isinstance(store, (str, StoreConfig)):
             store = build_store(store)
         self.store: LogBackend = store or MemoryLogStore()
         self.external = external or ExternalSystem()
@@ -210,6 +257,14 @@ class Engine:
         self._proc = None               # ProcessEngineDriver (mode="process")
         self._restart_lock = threading.Lock()
         self._lineage_ports = enabled_ports(pipeline, self.lineage_scopes)
+        if self.replay_ops:
+            # replay flips (Sec. 5) can turn done inputs of a replay
+            # operator back into needed ones, so checkpoint compaction must
+            # never GC the payloads feeding replay ops
+            self.store.set_gc_protect(
+                self.replay_ops |
+                {s for s, _sp, d, _dp, _ in pipeline.connections
+                 if d in self.replay_ops})
         self._build(first=True, restarted=resume)
 
     # ------------------------------------------------------------------
@@ -340,6 +395,10 @@ class Engine:
                     rt = self.runtimes.get(op_id)
                     if rt is not None:
                         progressed |= rt.drain_durable()
+                # checkpoint cadence: compact the log once the configured
+                # record count accumulated (no-op for non-checkpointing
+                # stores), keeping warm-restart replay O(interval)
+                self.store.maybe_checkpoint()
                 if not progressed and self._sources_exhausted():
                     # end of stream: force the durability watermark forward
                     # so held acks/writes release before we conclude we're
@@ -538,6 +597,7 @@ class Engine:
                 return any_released
 
             progressed |= drain_all(force=False)
+            self.store.maybe_checkpoint()
             if not progressed:
                 # push the durability watermark before concluding idleness
                 if drain_all(force=True):

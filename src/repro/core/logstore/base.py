@@ -140,6 +140,47 @@ class LogBackend(abc.ABC):
     def close(self):
         pass
 
+    # ---- checkpoint / truncation (bounded-replay recovery) ---------------
+    # A checkpointing backend periodically captures the full table image as
+    # a *checkpoint record* inside the log store and truncates the log
+    # records below that watermark, so a warm restart replays only
+    # O(records-since-last-checkpoint) work instead of O(pipeline lifetime).
+    # Backends without a durable log (memory) have nothing to truncate; the
+    # defaults make checkpointing a no-op for them.
+
+    #: True when ``checkpoint()`` actually truncates a durable log.
+    supports_checkpoint: bool = False
+
+    #: Senders whose EVENT_DATA payloads must survive checkpoint GC — the
+    #: engine registers the predecessors of replay operators (and lineage-
+    #: scoped producers) here: a replay flip can turn done inputs back
+    #: into needed ones (Sec. 5), so their payloads are never final-done.
+    gc_protect: frozenset = frozenset()
+
+    def set_gc_protect(self, ops: Iterable[str]):
+        self.gc_protect = frozenset(ops)
+
+    def checkpoint(self):
+        """Write a checkpoint record and truncate log records below it."""
+
+    def checkpoint_due(self) -> bool:
+        """True once enough records accumulated since the last checkpoint
+        (the configured checkpoint interval) that ``checkpoint()`` should
+        run."""
+        return False
+
+    def maybe_checkpoint(self):
+        """Checkpoint iff the cadence watermark has been reached — the
+        engine calls this from its supervision loops (cheap when not due)."""
+        if self.checkpoint_due():
+            self.checkpoint()
+
+    def recovery_replay_count(self) -> int:
+        """Log records replayed when this store (re)opened its durable
+        image — the bounded-replay metric: with checkpoint interval K this
+        stays O(K) regardless of pipeline lifetime."""
+        return 0
+
     # ---- recovery queries -----------------------------------------------
     @abc.abstractmethod
     def fetch_resend_events(self, op_id: str) -> List[Tuple[Event, str]]:

@@ -197,6 +197,48 @@ class GroupCommitStore(LogBackend):
         if self.inner is not None:
             self.inner.close()
 
+    # ---- checkpoint compaction (forwarded to a durable inner) ------------
+    @property
+    def supports_checkpoint(self):
+        return getattr(self.inner, "supports_checkpoint", False)
+
+    def checkpoint_due(self):
+        return self.inner is not None and self.inner.checkpoint_due()
+
+    def checkpoint(self):
+        """Flush the pending batch (so the checkpoint covers every durable
+        commit), compact the inner store, then truncate the view the same
+        way. NOT epoch-safe: a shard of an epoch-flushing ShardedLogStore
+        is checkpointed via ``ShardedLogStore.checkpoint`` instead, which
+        runs the epoch protocol and then calls ``_checkpoint_inner``."""
+        if not self.supports_checkpoint:
+            return
+        self.flush()
+        self._checkpoint_inner()
+
+    def _checkpoint_inner(self, keep_rows=None):
+        """Compact the durable inner and mirror the truncation into the
+        speculative view (floors + GC), keeping the two read images
+        aligned. Caller has already made the pending work durable."""
+        self.inner.compact(keep_rows=keep_rows)
+        with self.view.lock:
+            self.view._ssn_floor = dict(self.inner._ssn_floor)
+            self.view._ack_floor = dict(self.inner._ack_floor)
+            self.view.gc(self.gc_protect, keep_rows=keep_rows)
+
+    def maybe_checkpoint(self):
+        if self.checkpoint_due():
+            self.checkpoint()
+
+    def set_gc_protect(self, ops):
+        self.gc_protect = frozenset(ops)
+        if self.inner is not None:
+            self.inner.set_gc_protect(ops)
+
+    def recovery_replay_count(self):
+        return self.inner.recovery_replay_count() \
+            if self.inner is not None else 0
+
     # ---- shard protocol --------------------------------------------------
     def image(self) -> MemoryLogStore:
         return self.view

@@ -162,10 +162,11 @@ class SqliteEpochCoordinator(EpochCoordinator):
 
 
 def make_coordinator(base: str, path: Optional[str] = None) -> EpochCoordinator:
-    """Coordinator matching a ``build_store`` base: durable (sqlite) bases
-    get a durable commit record; memory bases get the simulated one."""
-    if base == "sqlite":
+    """Coordinator matching a ``build_store`` base: durable (sqlite /
+    segment) bases get a durable commit record; memory bases get the
+    simulated one."""
+    if base in ("sqlite", "segment"):
         if path is None:
-            raise ValueError("sqlite epoch coordinator needs a path")
+            raise ValueError(f"{base} epoch coordinator needs a path")
         return SqliteEpochCoordinator(path)
     return EpochCoordinator()

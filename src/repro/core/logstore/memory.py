@@ -44,6 +44,11 @@ class MemoryLogStore(LogBackend):
         # validation) must not scan the whole EVENT_LOG
         self._by_key3: Dict[Tuple, set] = {}            # (so,sp,id) -> keys
         self._by_rec_inset: Dict[Tuple, set] = {}       # (rec_op,ins) -> keys
+        # checkpoint-truncation floors: once a checkpointing subclass GC's
+        # done rows, the max-scan queries below would rewind — these floors
+        # (persisted in the checkpoint record) pin the pre-truncation maxima
+        self._ssn_floor: Dict[Tuple[str, str], int] = {}   # (op,port)->ssn
+        self._ack_floor: Dict[Tuple[str, str], int] = {}   # (op,port)->id
         self.commits = 0
         self.bytes_written = 0
 
@@ -265,6 +270,8 @@ class MemoryLogStore(LogBackend):
                                  for k, v in src.read_actions.items()}
             self.state = {k: list(v) for k, v in src.state.items()}
             self.lineage = list(src.lineage)
+            self._ssn_floor = dict(src._ssn_floor)
+            self._ack_floor = dict(src._ack_floor)
             self._reindex()
 
     # -- queries ----------------------------------------------------------
@@ -328,6 +335,9 @@ class MemoryLogStore(LogBackend):
     def last_sent_ssn(self, op_id: str) -> Dict[str, int]:
         with self.lock:
             out: Dict[str, int] = {}
+            for (o, p), ssn in self._ssn_floor.items():
+                if o == op_id:
+                    out[p] = ssn
             for k in self.event_log:
                 if k[0] == op_id and k[1] is not None:
                     out[k[1]] = max(out.get(k[1], -1), k[2])
@@ -336,6 +346,9 @@ class MemoryLogStore(LogBackend):
     def last_acked(self, op_id: str) -> Dict[str, int]:
         with self.lock:
             out: Dict[str, int] = {}
+            for (o, p), eid in self._ack_floor.items():
+                if o == op_id:
+                    out[p] = eid
             for k, r in self.event_log.items():
                 if r["rec_op"] == op_id and k[4] is not None:
                     p = r["rec_port"]
@@ -409,7 +422,12 @@ class MemoryLogStore(LogBackend):
                 keep_rows = bool(self.lineage)
             for k, r in list(self.event_log.items()):
                 if r["status"] == DONE and k[0] not in keep_data_for:
-                    self.event_data.pop(k[:3], None)
+                    # the payload serves every receiver of the event: drop
+                    # it only once ALL rows for the key are done, or a
+                    # straggling receiver would recover an empty body
+                    if all(self.event_log[k2]["status"] == DONE
+                           for k2 in self._by_key3.get(k[:3], ())):
+                        self.event_data.pop(k[:3], None)
                     if not keep_rows:
                         self._del_row(k)
 

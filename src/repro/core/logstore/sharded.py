@@ -58,8 +58,10 @@ class ShardedLogStore(LogBackend):
             # uncommitted epochs replay as durable after a real restart —
             # the half-durable outcome the protocol exists to prevent.
             # build_store wires the matching coordinator automatically.
+            from repro.core.logstore.segment import SegmentLogStore
             from repro.core.logstore.sqlite import SqliteLogStore
-            if any(isinstance(getattr(s, "inner", None), SqliteLogStore)
+            if any(isinstance(getattr(s, "inner", None),
+                              (SqliteLogStore, SegmentLogStore))
                    for s in self._group_shards):
                 raise ValueError(
                     "sharded store over durable group-commit shards needs "
@@ -235,26 +237,75 @@ class ShardedLogStore(LogBackend):
                 s.flush()
             return
         with self._flush_serial:
-            with self._epoch_barrier.write():
-                epoch_id = self.epoch_coord.next_epoch()
-                cut = [(s, s.cut_pending(epoch_id))
-                       for s in self._group_shards]
-            prepared = False
-            for s, batch in cut:
-                if batch:
-                    s.persist_prepared(epoch_id)
-                    prepared = True
-            if not prepared:
-                return
-            self.epoch_coord.commit_epoch(epoch_id)
-            for s, _batch in cut:
-                s.finish_epoch(epoch_id)
-            self.epochs_flushed += 1
+            self._flush_epochs()
+
+    def _flush_epochs(self):
+        """One epoch flush; caller holds ``_flush_serial``."""
+        with self._epoch_barrier.write():
+            epoch_id = self.epoch_coord.next_epoch()
+            cut = [(s, s.cut_pending(epoch_id))
+                   for s in self._group_shards]
+        prepared = False
+        for s, batch in cut:
+            if batch:
+                s.persist_prepared(epoch_id)
+                prepared = True
+        if not prepared:
+            return
+        self.epoch_coord.commit_epoch(epoch_id)
+        for s, _batch in cut:
+            s.finish_epoch(epoch_id)
+        self.epochs_flushed += 1
 
     def maybe_flush(self):
         if any(s._watermark_reached() for s in self.shards
                if hasattr(s, "_watermark_reached")):
             self.flush()
+
+    # ---- checkpoint compaction ------------------------------------------
+    @property
+    def supports_checkpoint(self):
+        return any(getattr(s, "supports_checkpoint", False)
+                   for s in self.shards)
+
+    def checkpoint_due(self):
+        return any(s.checkpoint_due() for s in self.shards)
+
+    def checkpoint(self):
+        """Checkpoint every shard. For group-commit shards this must run
+        the global-flush-epoch protocol first AND hold ``_flush_serial``
+        across the shard compactions: a concurrent epoch flush could
+        otherwise persist prepare records of a not-yet-committed epoch into
+        a shard image mid-compaction, baking conditional records into the
+        checkpoint unconditionally."""
+        if not self.supports_checkpoint:
+            return
+        # the "lineage exists => keep rows" guard is global (see gc())
+        keep_rows = any(s.image().lineage for s in self.shards)
+        if not self._group_shards:
+            for s in self.shards:
+                s.compact(keep_rows=keep_rows)
+            return
+        with self._flush_serial:
+            self._flush_epochs()
+            for s in self.shards:
+                if hasattr(s, "_checkpoint_inner"):
+                    if getattr(s, "supports_checkpoint", False):
+                        s._checkpoint_inner(keep_rows=keep_rows)
+                else:
+                    s.compact(keep_rows=keep_rows)
+
+    def maybe_checkpoint(self):
+        if self.checkpoint_due():
+            self.checkpoint()
+
+    def set_gc_protect(self, ops):
+        self.gc_protect = frozenset(ops)
+        for s in self.shards:
+            s.set_gc_protect(ops)
+
+    def recovery_replay_count(self):
+        return sum(s.recovery_replay_count() for s in self.shards)
 
     def crash(self):
         # the coordinator first: shards consult its (durable) committed

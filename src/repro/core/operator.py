@@ -200,7 +200,11 @@ class OperatorRuntime:
         self.replay_mode = replay_mode      # Sec. 5: no payload logging
         self.keep_state_history = keep_state_history
         self.pending_reads: List[Tuple[ReadAction, Any]] = []
-        self.stats = {"events_in": 0, "events_out": 0, "txns": 0}
+        self.stats = {"events_in": 0, "events_out": 0, "txns": 0,
+                      # recovery-replay accounting (the bounded-replay
+                      # claim: with checkpoint compaction these stay
+                      # O(records since the last checkpoint))
+                      "recovered_resends": 0, "recovered_inputs": 0}
         # externally visible effects (channel acks, external-system writes)
         # awaiting the store's durability watermark (group commit); FIFO
         self._deferred: List[Tuple[Any, Callable[[], None]]] = []

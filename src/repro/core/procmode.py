@@ -140,6 +140,14 @@ class StoreClient(LogBackend):
     def maybe_flush(self):
         self._q("maybe_flush")
 
+    def maybe_checkpoint(self):
+        """No-op on the worker side: checkpoint cadence is driven by the
+        parent's supervision loop against the real store — polling the
+        watermark over RPC from every worker would be pure overhead."""
+
+    def checkpoint(self):
+        self._q("checkpoint")
+
     # -- recovery / scaling / lineage queries ------------------------------
     def fetch_resend_events(self, op_id):
         return self._q("fetch_resend_events", op_id)
@@ -809,6 +817,10 @@ class ProcessEngineDriver:
     def _supervise(self):
         while not self._stop.is_set():
             self._check_deaths()
+            # checkpoint cadence lives here (not in the workers): the store
+            # is shared across groups, so one supervisor-side compaction
+            # truncates the log for everyone
+            self.e.store.maybe_checkpoint()
             if not self._failed.is_set() and self.transport.check_done():
                 self.e._done.set()
                 return

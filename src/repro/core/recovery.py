@@ -55,6 +55,7 @@ def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
     else:
         for ev, status in rt.store.fetch_resend_events(op.id):
             rt._send(ev)
+            rt.stats["recovered_resends"] += 1
     rt.crash_point(op.id, "recovery_post_resend")
 
     # ---- write actions (Alg 8) -------------------------------------------
@@ -77,6 +78,7 @@ def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
     mark_txn = rt.store.begin()
     n_marked = 0
     for ev, inset_id, status in rt.store.fetch_ack_events(op.id):
+        rt.stats["recovered_inputs"] += 1
         port = ev.rec_port
         if port in replay_pred_ports and not rt.replay_mode:
             # Alg 11 step 3: payload unavailable — mark "replay" and await

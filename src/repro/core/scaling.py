@@ -325,6 +325,10 @@ class Controller:
 
     # -- Algorithm 12 -------------------------------------------------------
     def scale_up(self, replica_id: str):
+        # compact first when due: the topology parties re-restore from the
+        # log around the update, so the reads should hit the checkpoint
+        # image plus a bounded tail, not the full pipeline history
+        self.e.store.maybe_checkpoint()
         if self.e.mode == "process":
             with self.lock:
                 return self._scale_up_process(replica_id)
@@ -372,6 +376,7 @@ class Controller:
 
     # -- Algorithm 13 -------------------------------------------------------
     def scale_down(self, replica_id: str):
+        self.e.store.maybe_checkpoint()
         if self.e.mode == "process":
             with self.lock:
                 return self._scale_down_process(replica_id)

@@ -15,6 +15,9 @@ import pytest  # noqa: E402  (sys.path fix must precede imports)
 #
 #   unset / "memory"  -> the four memory-family stacks (fast local default)
 #   "sqlite"          -> durable sqlite stacks
+#   "segment"         -> durable append-only segment stacks (checkpoint
+#                        compaction runs live: tests/helpers.mk_store gives
+#                        them a small checkpoint interval + segment size)
 #   "sharded+group"   -> the epoch-flushing (2PC) sharded stacks
 #   "all"             -> the union (nightly)
 #   anything else     -> comma list of literal build_store specs
@@ -24,10 +27,12 @@ _SPEC_SETS = {
     "memory": ["memory", "memory+sharded", "memory+group",
                "memory+sharded+group"],
     "sqlite": ["sqlite", "sqlite+group"],
+    "segment": ["segment", "segment+group"],
     "sharded+group": ["memory+sharded+group", "sqlite+sharded+group"],
 }
 _SPEC_SETS["all"] = (_SPEC_SETS["memory"] + _SPEC_SETS["sqlite"]
-                     + ["sqlite+sharded+group"])
+                     + _SPEC_SETS["segment"]
+                     + ["sqlite+sharded+group", "segment+sharded+group"])
 
 
 def active_store_specs():

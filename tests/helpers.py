@@ -15,7 +15,7 @@ from functools import partial
 from repro.core import (CountWindowOperator, Engine, GeneratorSource,
                         MapOperator, Pipeline, ReadSource, SyncJoinOperator,
                         TerminalSink)
-from repro.core.logstore import build_store
+from repro.core.logstore import StoreConfig, build_store
 
 
 # -- picklable operator functions (spawn-safe: no lambdas/closures) ---------
@@ -42,11 +42,20 @@ def _join_agg(a, b):
 
 
 def mk_store(spec: str, **kw):
-    """build_store with a fresh temp path for sqlite-family specs, so each
-    test case gets its own durable files."""
+    """build_store with a fresh temp path for durable-family specs, so each
+    test case gets its own durable files. Segment-family specs run with a
+    small segment size and checkpoint interval so rotation + checkpoint
+    compaction exercise live under the whole protocol matrix."""
     if spec.startswith("sqlite") and "path" not in kw:
         d = tempfile.mkdtemp(prefix="logio-db-")
         kw["path"] = os.path.join(d, "log.db")
+    if spec.startswith("segment"):
+        if "path" not in kw:
+            d = tempfile.mkdtemp(prefix="logio-segs-")
+            kw["path"] = os.path.join(d, "log.segs")
+        kw.setdefault("segment_bytes", 32 * 1024)
+        kw.setdefault("checkpoint_interval", 25)
+        return build_store(StoreConfig.parse(spec, **kw))
     return build_store(spec, **kw)
 
 

@@ -9,8 +9,7 @@ Usage: python tests/kill9_runner.py <store_spec> <db_path> <external_path>
 import sys
 
 from repro.core import Engine
-from repro.core.logstore import build_store
-from tests.helpers import FileExternalSystem, linear_pipeline
+from tests.helpers import FileExternalSystem, linear_pipeline, mk_store
 
 
 def main():
@@ -19,9 +18,11 @@ def main():
     ctx = sys.argv[5] if len(sys.argv) > 5 else None
     build, _expected = linear_pipeline(writes=1, rate=0.01)
     # no time-based flushing: whatever the watermark has not flushed when
-    # the SIGKILL lands is a genuinely unflushed (or uncommitted) epoch
-    store = build_store(spec, path=db_path, shards=3, batch_size=4,
-                        interval=60.0)
+    # the SIGKILL lands is a genuinely unflushed (or uncommitted) epoch.
+    # mk_store gives segment-family specs live checkpoint compaction, so
+    # the SIGKILL can land mid-compaction too.
+    store = mk_store(spec, path=db_path, shards=3, batch_size=4,
+                     interval=60.0)
     eng = Engine(build(), mode="process", store=store,
                  external=FileExternalSystem(ext_path),
                  transport=transport, ctx=ctx, restart_delay=0.01)

@@ -1,0 +1,312 @@
+"""Segment-log backend tests (checkpoint compaction tentpole):
+
+  * rotation + sealed-segment compression, torn-tail tolerance
+  * bounded-replay recovery — warm restart replays O(checkpoint interval)
+    records, not O(pipeline lifetime)
+  * bounded on-disk size under continuous done-event traffic
+  * recovery-counter floors surviving truncation
+  * gc_protect keeping replay-feeding payloads across compaction
+  * TRUE ``kill -9`` at exact compaction/rotation control points: the
+    reopened store is always either the complete old image or the complete
+    new one — committed records are never lost, the index is never torn.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import Engine, Event
+from repro.core.events import DONE, UNDONE
+from repro.core.logstore.segment import SegmentLogStore
+from tests.helpers import (FileExternalSystem, linear_pipeline, mk_store,
+                           sink_outputs)
+
+
+def _fill(store, n, start=0, body=True):
+    for i in range(start, start + n):
+        txn = store.begin()
+        ev = Event(i, "A", "out", "B", "in",
+                   body={"v": i} if body else None)
+        txn.log_event(ev, UNDONE)
+        txn.put_event_data(ev)
+        txn.commit()
+
+
+def _mark_done(store, ids):
+    txn = store.begin()
+    for i in ids:
+        txn.set_status(("A", "out", i), DONE)
+    txn.commit()
+
+
+# ---------------------------------------------------------------------------
+# Rotation, compression, torn tails
+# ---------------------------------------------------------------------------
+
+def test_rotation_seals_and_compresses(tmp_path):
+    path = str(tmp_path / "segs")
+    store = SegmentLogStore(path, segment_bytes=2048)
+    _fill(store, 60)
+    assert store.rotations > 0
+    store.close()   # drains the background sealer
+    sealed = [f for f in os.listdir(path) if f.endswith(".logz")]
+    active = [f for f in os.listdir(path) if f.endswith(".log")]
+    assert sealed and len(active) == 1
+    # every committed record replays from the sealed + active segments
+    store2 = SegmentLogStore(path)
+    assert store2.recovery_replay_count() == 60
+    assert store2.last_sent_ssn("A") == {"out": 59}
+    assert [e.body for e, _ in store2.fetch_resend_events("A")] == \
+        [{"v": i} for i in range(60)]
+    store2.close()
+
+
+def test_torn_tail_frame_is_dropped(tmp_path):
+    path = str(tmp_path / "segs")
+    store = SegmentLogStore(path, segment_bytes=1 << 20)
+    _fill(store, 10)
+    active = [f for f in os.listdir(path) if f.endswith(".log")][0]
+    store.close()
+    # a kill mid-append leaves a partial frame at the tail of the active
+    # segment; it must not poison the committed prefix
+    with open(os.path.join(path, active), "ab") as f:
+        f.write(b"\xff\x00\x00\x00garbage-partial-frame")
+    store2 = SegmentLogStore(path)
+    assert store2.recovery_replay_count() == 10
+    assert store2.last_sent_ssn("A") == {"out": 9}
+    store2.close()
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint watermark: bounded replay, bounded disk, counter floors
+# ---------------------------------------------------------------------------
+
+def test_warm_restart_replays_at_most_checkpoint_interval(tmp_path):
+    K = 20
+    path = str(tmp_path / "segs")
+    store = SegmentLogStore(path, segment_bytes=8192, checkpoint_interval=K)
+    for i in range(300):
+        _fill(store, 1, start=i)
+        _mark_done(store, [i])
+        store.maybe_checkpoint()
+    assert store.compactions > 0
+    store.close()
+    # 600 records were ever appended; a warm restart replays only the tail
+    # above the checkpoint watermark — O(K), not O(lifetime)
+    store2 = SegmentLogStore(path, checkpoint_interval=K)
+    assert store2.recovery_replay_count() <= K
+    # the truncated history is still fully summarized by the image + floors
+    assert store2.last_sent_ssn("A") == {"out": 299}
+    store2.close()
+
+
+def test_disk_stays_bounded_under_done_traffic(tmp_path):
+    path = str(tmp_path / "segs")
+    store = SegmentLogStore(path, segment_bytes=4096, checkpoint_interval=50)
+    peak = 0
+    for i in range(400):
+        _fill(store, 1, start=i)
+        _mark_done(store, [i])
+        store.maybe_checkpoint()
+        peak = max(peak, store.disk_bytes())
+    # done events are truncated at each checkpoint: peak on-disk size is a
+    # function of the checkpoint interval, far below the total log volume
+    assert store.bytes_written > 2 * peak
+    assert peak < 128 * 1024
+    store.close()
+
+
+def test_counter_floors_survive_truncation(tmp_path):
+    path = str(tmp_path / "segs")
+    store = SegmentLogStore(path)
+    _fill(store, 10)
+    txn = store.begin()
+    for i in range(10):
+        txn.assign_insets(("A", "out", i), ["B:1"], rec_op="B")
+    txn.commit()
+    _mark_done(store, range(10))
+    store.compact()
+    # all rows truncated, yet the per-port counters must not rewind —
+    # recovery would otherwise reuse SSNs / re-ack acked events
+    assert store.last_sent_ssn("A") == {"out": 9}
+    assert store.last_acked("B") == {"in": 9}
+    store.close()
+    store2 = SegmentLogStore(path)
+    assert store2.recovery_replay_count() == 0
+    assert store2.last_sent_ssn("A") == {"out": 9}
+    assert store2.last_acked("B") == {"in": 9}
+    store2.close()
+
+
+def test_gc_protect_keeps_replay_feeding_payloads(tmp_path):
+    path = str(tmp_path / "segs")
+    store = SegmentLogStore(path)
+    store.set_gc_protect({"A"})
+    _fill(store, 5)
+    _mark_done(store, range(5))
+    store.compact()
+    # a replay flip can turn these done inputs back into needed ones
+    # (Sec. 5): the protected sender's payloads must survive compaction
+    assert store.event_status(("A", "out", 3)) == [(None, DONE)]
+    store.close()
+    store2 = SegmentLogStore(path)
+    store2.set_gc_protect({"A"})
+    # the replay flip itself: done -> undone, and the payload is still there
+    txn = store2.begin()
+    txn.set_status(("A", "out", 3), UNDONE)
+    txn.commit()
+    assert [(e.event_id, e.body) for e, _ in store2.fetch_resend_events("A")] \
+        == [(3, {"v": 3})]
+    store2.close()
+
+
+# ---------------------------------------------------------------------------
+# kill -9 at exact compaction / rotation control points
+# ---------------------------------------------------------------------------
+
+_CHILD = r"""
+import os, signal, sys
+from repro.core.events import DONE, UNDONE, Event
+from repro.core.logstore.segment import SegmentLogStore
+
+path, stage = sys.argv[1], sys.argv[2]
+store = SegmentLogStore(path, segment_bytes=2048)
+for i in range(40):
+    txn = store.begin()
+    ev = Event(i, "A", "out", "B", "in", body={"v": i})
+    txn.log_event(ev, UNDONE)
+    txn.put_event_data(ev)
+    txn.commit()
+txn = store.begin()
+for i in range(20):
+    txn.set_status(("A", "out", i), DONE, rec_op=None)
+txn.commit()
+def hook(s):
+    if s == stage:
+        os.kill(os.getpid(), signal.SIGKILL)
+store.test_hook = hook
+store.compact()
+print("SURVIVED", flush=True)
+"""
+
+
+def _env():
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo_root, "src"), repo_root]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    return env
+
+
+@pytest.mark.parametrize("stage", ["compact:pre_swap", "compact:post_swap"])
+def test_kill9_mid_compaction_never_tears_the_store(stage, tmp_path):
+    path = str(tmp_path / "segs")
+    proc = subprocess.run([sys.executable, "-c", _CHILD, path, stage],
+                          env=_env(), capture_output=True, timeout=60)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr.decode()
+
+    # the index is never torn: whatever survived parses and names files
+    # that all exist
+    with open(os.path.join(path, "index.json")) as f:
+        idx = json.load(f)
+    for name in idx["segments"] + ([idx["checkpoint"]] if idx["checkpoint"]
+                                   else []):
+        assert os.path.exists(os.path.join(path, name)), name
+
+    # committed records are never lost: pre_swap reopens the OLD store
+    # image, post_swap the compacted one — both agree on every live fact
+    store = SegmentLogStore(path)
+    assert store.last_sent_ssn("A") == {"out": 39}
+    resend = {e.event_id: e.body for e, _ in store.fetch_resend_events("A")}
+    assert resend == {i: {"v": i} for i in range(20, 40)}
+    if stage == "compact:pre_swap":
+        # old image: the done rows (and the full log) are still there
+        assert store.event_status(("A", "out", 5)) == [(None, DONE)]
+        assert store.recovery_replay_count() == 41
+    else:
+        # new image: done rows truncated, replay starts at the checkpoint
+        assert store.event_status(("A", "out", 5)) == []
+        assert store.recovery_replay_count() == 0
+    store.close()
+
+
+_CHILD_ROTATE = r"""
+import os, signal, sys
+from repro.core.events import UNDONE, Event
+from repro.core.logstore.segment import SegmentLogStore
+
+path = sys.argv[1]
+store = SegmentLogStore(path, segment_bytes=2048)
+def hook(s):
+    if s == "rotate:pre_index":
+        os.kill(os.getpid(), signal.SIGKILL)
+store.test_hook = hook
+for i in range(200):
+    txn = store.begin()
+    ev = Event(i, "A", "out", "B", "in", body={"v": i})
+    txn.log_event(ev, UNDONE)
+    txn.put_event_data(ev)
+    txn.commit()
+    print(i, flush=True)
+"""
+
+
+def test_kill9_mid_rotation_keeps_every_acked_commit(tmp_path):
+    path = str(tmp_path / "segs")
+    proc = subprocess.run([sys.executable, "-c", _CHILD_ROTATE, path],
+                          env=_env(), capture_output=True, timeout=60)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr.decode()
+    acked = [int(x) for x in proc.stdout.split()]
+    assert acked, "child died before any commit"
+    store = SegmentLogStore(path)
+    have = {e.event_id for e, _ in store.fetch_resend_events("A")}
+    # every commit the child saw acknowledged survived the kill (the one
+    # in-flight commit beyond the last ack may or may not have landed)
+    assert set(acked) <= have
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# Whole-engine kill -9 on the segment family (compaction runs live via
+# mk_store's checkpoint interval) -> warm restart is exactly-once
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["segment+group", "segment+sharded+group"])
+def test_kill9_whole_engine_segment_exactly_once(spec, tmp_path,
+                                                 proc_transport, proc_ctx):
+    db_path = str(tmp_path / "log.segs")
+    ext_path = str(tmp_path / "external.bin")
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.Popen(
+        [sys.executable, os.path.join(repo_root, "tests", "kill9_runner.py"),
+         spec, db_path, ext_path, proc_transport, proc_ctx],
+        stdout=subprocess.PIPE, env=_env(), start_new_session=True)
+    try:
+        assert proc.stdout.readline().strip() == b"READY"
+        time.sleep(0.4)
+    finally:
+        try:
+            os.killpg(os.getpgid(proc.pid), signal.SIGKILL)
+        except ProcessLookupError:
+            pass
+        proc.wait()
+
+    store = mk_store(spec, path=db_path, shards=3, batch_size=4,
+                     interval=60.0)
+    build, expected = linear_pipeline(writes=1, rate=0.01)
+    eng = Engine(build(), mode="process", store=store,
+                 external=FileExternalSystem(ext_path), resume=True,
+                 transport=proc_transport, ctx=proc_ctx, restart_delay=0.01)
+    eng.start()
+    ok = eng.wait(90)
+    eng.stop()
+    assert ok
+    assert sink_outputs(eng) == expected
+    win_writes = [b for b in eng.external.committed()
+                  if isinstance(b, dict) and "inset" in b]
+    assert len(win_writes) == 5
