@@ -22,7 +22,10 @@ Measurements:
     peak RSS growth.  The point of credit-based flow control: a slow
     consumer bounds sender/supervisor memory at the window instead of
     growing the supervisor without bound (the pre-transport-layer
-    ``force_put`` behaviour).
+    ``force_put`` behaviour).  On the byte transports (socket/tcp/shm)
+    the sweep also reports the wire-protocol counters: superframes,
+    bytes, mean events per superframe, and the ack-coalescing ratio
+    (control entries per control-carrying frame).
 
 Run:  PYTHONPATH=src:. python benchmarks/process_mode.py [--quick]
                        [--json BENCH_process.json]
@@ -163,7 +166,7 @@ def backpressure_sweep(rows, *, quick: bool = False,
     peak events buffered in the supervisor, peak supervisor RSS growth."""
     n = 400 if quick else 1500
     sink_pt = 0.001
-    for transport in ("routed", "socket", "tcp"):
+    for transport in ("routed", "socket", "tcp", "shm"):
         for window in windows:
             eng = Engine(_bp_build(n, window, sink_pt)(), mode="process",
                          transport=transport, store="memory")
@@ -186,15 +189,27 @@ def backpressure_sweep(rows, *, quick: bool = False,
             dt = time.time() - t0
             stop.set()
             wt.join(timeout=5.0)
+            ws = eng.wire_stats()
             eng.stop()
             if not ok:
                 raise TimeoutError(
                     f"back-pressure run stalled ({transport}, w={window})")
-            for suffix, us, derived in (
-                    ("throughput", dt * 1e6 / n, round(n / dt, 1)),
+            cols = [("throughput", dt * 1e6 / n, round(n / dt, 1)),
                     ("peak_sup_buffered", float(peak[0]), peak[0]),
                     ("peak_sup_rss_delta_kb", float(rss_peak[0] - rss0),
-                     rss_peak[0] - rss0)):
+                     rss_peak[0] - rss0)]
+            if ws:
+                # batching quality on the byte transports: how many events
+                # ride each superframe, how many acks each control frame
+                # coalesces, and the total wire volume
+                epf = ws.get("events_per_frame", 0.0)
+                apc = ws.get("ctrl_per_ctrl_frame", 0.0)
+                cols += [("wire_frames", float(ws["frames"]), ws["frames"]),
+                         ("wire_kb", ws["bytes"] / 1024.0,
+                          round(ws["bytes"] / 1024.0, 1)),
+                         ("events_per_frame", epf, round(epf, 2)),
+                         ("acks_per_ctrl_frame", apc, round(apc, 2))]
+            for suffix, us, derived in cols:
                 name = f"transport/bp/{transport}/w{window}/{suffix}"
                 rows.append((name, us, derived))
                 print(f"{name},{us:.0f},{derived}", flush=True)

@@ -49,13 +49,15 @@ class TransportConfig:
     """Typed description of the event transport, replacing the stringly
     ``transport=`` + ``transport_options={...}`` pair. ``name`` is
     ``"local"`` (thread/step mode) or a process transport
-    (``"routed"``/``"socket"``/``"tcp"``); the remaining fields configure
-    the socket transports and are ignored by the others."""
+    (``"routed"``/``"socket"``/``"tcp"``/``"shm"``); the remaining fields
+    configure the byte transports and are ignored by the others."""
 
     name: str = "local"
     family: Optional[str] = None        # "unix" | "inet" (socket only)
     host: Optional[str] = None          # bind host (inet only)
     authkey: Optional[bytes] = None     # peer-auth secret (per-run default)
+    ack_flush: Optional[float] = None   # ack-coalescing linger (seconds)
+    ring_bytes: Optional[int] = None    # shm ring capacity per direction
 
     def __post_init__(self):
         valid = ("local",) + tuple(process_transport_names())
@@ -65,6 +67,10 @@ class TransportConfig:
         if self.family not in (None, "unix", "inet"):
             raise ValueError(f"unknown socket family {self.family!r} "
                              "(expected 'unix' or 'inet')")
+        if self.ack_flush is not None and self.ack_flush < 0:
+            raise ValueError("ack_flush must be >= 0")
+        if self.ring_bytes is not None and self.ring_bytes < 4096:
+            raise ValueError("ring_bytes must be >= 4096")
 
     def options(self) -> dict:
         """The legacy ``transport_options`` dict this config describes."""
@@ -75,6 +81,10 @@ class TransportConfig:
             out["host"] = self.host
         if self.authkey is not None:
             out["authkey"] = self.authkey
+        if self.ack_flush is not None:
+            out["ack_flush"] = self.ack_flush
+        if self.ring_bytes is not None:
+            out["ring_bytes"] = self.ring_bytes
         return out
 
 
@@ -208,7 +218,7 @@ class Engine:
             self.transport = "local"
         self.proc_ctx = ctx
         self.transport_options = dict(transport_options or {})
-        if self.transport in ("socket", "tcp"):
+        if self.transport in ("socket", "tcp", "shm"):
             if self.transport == "tcp":
                 if self.transport_options.get("family", "inet") != "inet":
                     raise ValueError(
@@ -328,12 +338,19 @@ class Engine:
         authoritative channel specs) plus this group's factories.  No
         recovery state crosses: the worker rebuilds it from the log."""
         p = self.pipeline
+        opts = dict(self.transport_options)
+        if self.transport == "shm":
+            # rings are a same-host medium: ship the placement node map so
+            # each worker picks ring vs. socket per peer (None == None for
+            # unplaced pairs — the single-host default is co-located)
+            opts["placement"] = {g: self.placement.node_of(g)
+                                 for g in set(p.groups.values())}
         return WorkerBootstrap(
             group=group,
             incarnation=incarnation,
             recover=recover,
             transport=self.transport,
-            transport_options=dict(self.transport_options),
+            transport_options=opts,
             factories={o: f for o, f in p.factories.items()
                        if p.groups[o] == group},
             connections=list(p.connections),
@@ -500,6 +517,14 @@ class Engine:
             return self._proc.op_stats()
         return {op_id: rt.stats["events_in"] + rt.stats["events_out"]
                 for op_id, rt in self.runtimes.items()}
+
+    def wire_stats(self) -> Dict[str, float]:
+        """Wire-protocol counters (superframes, bytes, coalescing ratios)
+        aggregated across workers — byte transports in process mode only;
+        empty for ``local``/``routed``."""
+        if self._proc is not None:
+            return self._proc.wire_stats()
+        return {}
 
     def wait(self, timeout: float = 60.0) -> bool:
         if self.protocol == "abs":

@@ -22,6 +22,7 @@ between shards, buffered into batches, and persisted as a WAL verbatim.
 from __future__ import annotations
 
 import abc
+import dataclasses
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.events import Event
@@ -44,10 +45,23 @@ class LogTransaction:
     # -- mutations (buffered) ---------------------------------------------
     def log_event(self, ev: Event, status: str,
                   inset_id: Optional[str] = None):
+        if ev.cached_blob() is not None:
+            # the payload travels as a put_event_blob op: carrying the body
+            # here too would double-ship it through store RPC and WAL
+            # pickles (EVENT_LOG rows only ever read the routing fields)
+            ev = dataclasses.replace(ev, body=None, header=dict(ev.header))
         self.ops.append(("log_event", ev, status, inset_id))
 
     def put_event_data(self, ev: Event):
-        self.ops.append(("put_event_data", ev))
+        blob = ev.cached_blob()
+        if blob is not None:
+            # zero-copy path: the transport's wire payload doubles as the
+            # EVENT_DATA blob — one encode per event, shared end to end.
+            # op[2] is the row's home operator (the sharded router's key).
+            home = ev.rec_op if ev.rec_op is not None else ev.send_op
+            self.ops.append(("put_event_blob", ev.key(), home, blob))
+        else:
+            self.ops.append(("put_event_data", ev))
 
     def delete_event_data(self, key):
         self.ops.append(("delete_event_data", key))

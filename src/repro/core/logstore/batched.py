@@ -35,6 +35,7 @@ engine-level pod failures never lose the store either way.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -65,16 +66,51 @@ class GroupCommitStore(LogBackend):
         self.durable_seq = 0
         self._lost_tokens: set = set()      # commits dropped by crash()
         self.flushes = 0
+        # async flush I/O: commits enqueue + nudge; the flusher thread owns
+        # the inner-backend writes (io-overlap — the operator thread never
+        # blocks on fsync).  Serialized against explicit flush()/crash()/
+        # checkpoint() by _flush_serial (RLock: checkpoint calls flush).
+        # Lock order everywhere: _flush_serial -> view.lock.
+        self._flush_serial = threading.RLock()
+        self._flush_wake = threading.Event()
+        self._flusher: Optional[threading.Thread] = None
+        self._flusher_stop = False
 
     # ---- commit (speculative apply + enqueue) ---------------------------
     def _commit(self, ops):
         with self.view.lock:
             self.view._validate(ops)
+            first = not self._pending
             token = self._commit_routed(ops)
-            need_flush = self._watermark_reached()
-        if need_flush:
-            self.flush()
+            nudge = first or self._watermark_reached()
+        # standalone store only: as a shard of an epoch-flushing
+        # ShardedLogStore, commits arrive via _commit_routed and the
+        # sharded store's epoch flusher owns all flush I/O
+        if self._flusher is None:
+            self._ensure_flusher()
+        if nudge:
+            self._flush_wake.set()
         return token
+
+    def _ensure_flusher(self):
+        with self.view.lock:
+            if self._flusher is None and not self._flusher_stop:
+                t = threading.Thread(target=self._flusher_loop, daemon=True,
+                                     name="group-commit-flusher")
+                self._flusher = t
+                t.start()
+
+    def _flusher_loop(self):
+        while True:
+            ts = self._first_ts
+            timeout = None if ts is None else \
+                max(0.0, ts + self.interval - time.monotonic())
+            self._flush_wake.wait(timeout)
+            self._flush_wake.clear()
+            if self._flusher_stop:
+                return
+            if self._watermark_reached():
+                self.flush()
 
     def _commit_routed(self, ops) -> int:
         """Shard-protocol entry: caller holds ``shard_lock`` and has
@@ -83,7 +119,7 @@ class GroupCommitStore(LogBackend):
         self.commit_seq += 1
         self._pending.append((self.commit_seq, ops))
         if self._first_ts is None:
-            self._first_ts = time.time()
+            self._first_ts = time.monotonic()
         return self.commit_seq
 
     def _watermark_reached(self) -> bool:
@@ -95,7 +131,9 @@ class GroupCommitStore(LogBackend):
         if len(pending) >= self.batch_size:
             return True
         ts = self._first_ts
-        return ts is not None and time.time() - ts >= self.interval
+        # monotonic, not wall-clock: an NTP step must neither stall the
+        # interval watermark forever nor fire it spuriously
+        return ts is not None and time.monotonic() - ts >= self.interval
 
     # ---- durability ------------------------------------------------------
     def is_durable(self, token) -> bool:
@@ -103,25 +141,35 @@ class GroupCommitStore(LogBackend):
             (token <= self.durable_seq and token not in self._lost_tokens)
 
     def flush(self):
-        with self.view.lock:
-            batch, self._pending = self._pending, []
-            self._first_ts = None
+        with self._flush_serial:
+            with self.view.lock:
+                batch, self._pending = self._pending, []
+                self._first_ts = None
             if not batch:
                 return
             ops_lists = [ops for _, ops in batch]
+            # the inner-backend write runs OUTSIDE view.lock: commits keep
+            # applying to the speculative view while the I/O is in flight
+            # (_flush_serial keeps concurrent flushes from reordering)
             if self.inner is not None:
                 self.inner.apply_many(ops_lists)
             else:
                 self._durable_history.extend(ops_lists)
-            # the watermark is the last flushed token — tokens are never
-            # reused, so commits lost in a crash() stay non-durable forever
-            self.durable_seq = batch[-1][0]
-            self.flushes += 1
+            with self.view.lock:
+                # the watermark is the last flushed token — tokens are never
+                # reused, so commits lost in a crash() stay non-durable
+                self.durable_seq = max(self.durable_seq, batch[-1][0])
+                self.flushes += 1
 
     def maybe_flush(self):
-        # racy fast path: flush() re-checks under the lock
+        # racy fast path: flush() re-checks under the lock.  With the
+        # flusher running this is just a nudge — the caller (the operator
+        # loop's drain_durable) never blocks on flush I/O.
         if self._watermark_reached():
-            self.flush()
+            if self._flusher is not None and not self._flusher_stop:
+                self._flush_wake.set()
+            else:
+                self.flush()
 
     # ---- global flush epochs (2PC shard side; see logstore/epoch.py) -----
     def cut_pending(self, epoch_id: int) -> List[Tuple[int, List[Tuple]]]:
@@ -161,8 +209,12 @@ class GroupCommitStore(LogBackend):
         """Full-process crash: lose the unflushed batch, roll back
         prepared-but-uncommitted epochs, rebuild the view from the durable
         image (prepared batches of *committed* epochs are durable — the
-        epoch-commit record is the atomicity point)."""
-        with self.view.lock:
+        epoch-commit record is the atomicity point).  Holding
+        ``_flush_serial`` first parks the crash at a flush-protocol
+        quiescent point: an in-flight async flush either completed (its
+        batch is durable) or never started (its batch is lost) — never
+        half-applied."""
+        with self._flush_serial, self.view.lock:
             # tokens of the lost commits must never read as durable, even
             # once later commits push the watermark past their numbers
             self._lost_tokens.update(t for t, _ in self._pending)
@@ -192,7 +244,16 @@ class GroupCommitStore(LogBackend):
                     fresh._apply_ops(ops)
             self.view = fresh
 
+    def _stop_flusher(self):
+        self._flusher_stop = True
+        self._flush_wake.set()
+        t = self._flusher
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout=2.0)
+        self._flusher = None
+
     def close(self):
+        self._stop_flusher()
         self.flush()
         if self.inner is not None:
             self.inner.close()
@@ -213,8 +274,9 @@ class GroupCommitStore(LogBackend):
         runs the epoch protocol and then calls ``_checkpoint_inner``."""
         if not self.supports_checkpoint:
             return
-        self.flush()
-        self._checkpoint_inner()
+        with self._flush_serial:        # no async flush mid-compaction
+            self.flush()
+            self._checkpoint_inner()
 
     def _checkpoint_inner(self, keep_rows=None):
         """Compact the durable inner and mirror the truncation into the

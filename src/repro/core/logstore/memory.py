@@ -172,6 +172,15 @@ class MemoryLogStore(LogBackend):
         elif kind == "put_event_data":
             _, ev = op
             self.event_data[ev.key()] = self._make_blob(ev)
+        elif kind == "put_event_blob":
+            # pre-serialized payload (the transport's wire encode, shared):
+            # stored verbatim — _load_blob handles pickled bytes natively
+            _, key, _home, blob = op
+            if not isinstance(blob, bytes):
+                blob = bytes(blob)
+            self.event_data[key] = blob
+            if self.eager_serialize:
+                self.bytes_written += len(blob)
         elif kind == "delete_event_data":
             self.event_data.pop(op[1], None)
         elif kind == "set_status":

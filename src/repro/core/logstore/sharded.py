@@ -32,6 +32,7 @@ transaction is ever half-durable and flush I/O never blocks commits.
 from __future__ import annotations
 
 import threading
+import time
 import zlib
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
@@ -83,6 +84,13 @@ class ShardedLogStore(LogBackend):
         self._epoch_barrier = ReadWriteLock()
         self._flush_serial = threading.Lock()   # one epoch flush at a time
         self.epochs_flushed = 0
+        # async epoch flushes: commits nudge, the flusher thread runs the
+        # 2PC (cut under the barrier, prepare I/O outside all shard locks)
+        # — operator threads never block on shard fsyncs
+        self._flush_wake = threading.Event()
+        self._flusher: Optional[threading.Thread] = None
+        self._flusher_stop = False
+        self._flusher_idle = False
 
     # ---- placement -------------------------------------------------------
     def _idx(self, op_id) -> int:
@@ -99,6 +107,8 @@ class ShardedLogStore(LogBackend):
             ev = op[1]
             return [self._idx(ev.rec_op if ev.rec_op is not None
                               else ev.send_op)]
+        if kind == "put_event_blob":
+            return [self._idx(op[2])]           # pre-computed home operator
         if kind == "set_status":
             _, key, _status, _inset, rec_op, _only = op
             if rec_op is not None:
@@ -126,8 +136,47 @@ class ShardedLogStore(LogBackend):
             token = self._commit_under_barrier(ops)
         finally:
             self._epoch_barrier.release_read()
-        self.maybe_flush()
+        if self._group_shards:
+            if self._flusher is None:
+                self._ensure_flusher()
+            # wake on a reached watermark, or whenever the flusher sits in
+            # its indefinite idle wait (it recomputes the interval deadline
+            # from the shards' batch timestamps on wakeup); a racy missed
+            # wake only delays until the next commit or maybe_flush nudge
+            if self._flusher_idle or \
+                    any(s._watermark_reached() for s in self._group_shards):
+                self._flush_wake.set()
+        else:
+            self.maybe_flush()
         return token
+
+    def _ensure_flusher(self):
+        with self._flush_serial:
+            if self._flusher is None and not self._flusher_stop:
+                t = threading.Thread(target=self._flusher_loop, daemon=True,
+                                     name="epoch-flusher")
+                self._flusher = t
+                t.start()
+
+    def _flusher_loop(self):
+        while True:
+            timestamps = [s._first_ts for s in self._group_shards]
+            live = [ts for ts in timestamps if ts is not None]
+            if live:
+                interval = min(getattr(s, "interval", 0.005)
+                               for s in self._group_shards)
+                timeout = max(0.0, min(live) + interval - time.monotonic())
+            else:
+                timeout = None
+                self._flusher_idle = True
+            self._flush_wake.wait(timeout)
+            self._flusher_idle = False
+            self._flush_wake.clear()
+            if self._flusher_stop:
+                return
+            if any(s._watermark_reached() for s in self._group_shards):
+                with self._flush_serial:
+                    self._flush_epochs()
 
     def _commit_under_barrier(self, ops):
         routes = [self._route(op) for op in ops]
@@ -260,7 +309,11 @@ class ShardedLogStore(LogBackend):
     def maybe_flush(self):
         if any(s._watermark_reached() for s in self.shards
                if hasattr(s, "_watermark_reached")):
-            self.flush()
+            if self._group_shards and self._flusher is not None \
+                    and not self._flusher_stop:
+                self._flush_wake.set()      # async: never block the caller
+            else:
+                self.flush()
 
     # ---- checkpoint compaction ------------------------------------------
     @property
@@ -308,14 +361,26 @@ class ShardedLogStore(LogBackend):
         return sum(s.recovery_replay_count() for s in self.shards)
 
     def crash(self):
-        # the coordinator first: shards consult its (durable) committed
-        # set when deciding which prepared epochs survive
-        if self.epoch_coord is not None:
-            self.epoch_coord.crash()
-        for s in self.shards:
-            s.crash()
+        # _flush_serial parks the crash at a protocol-quiescent point: an
+        # in-flight async epoch flush either fully committed or never cut
+        with self._flush_serial:
+            # the coordinator first: shards consult its (durable) committed
+            # set when deciding which prepared epochs survive
+            if self.epoch_coord is not None:
+                self.epoch_coord.crash()
+            for s in self.shards:
+                s.crash()
+
+    def _stop_flusher(self):
+        self._flusher_stop = True
+        self._flush_wake.set()
+        t = self._flusher
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout=2.0)
+        self._flusher = None
 
     def close(self):
+        self._stop_flusher()
         self.flush()
         for s in self.shards:
             s.close()

@@ -417,6 +417,13 @@ class OperatorRuntime:
                                only_status=REPLAY)
                 e.header["replay"] = True
             else:
+                if not self.replay_mode and \
+                        any(getattr(ch, "prefer_blob", False)
+                            for ch in op.out_channels.get(e.send_port, ())):
+                    # byte transport downstream: serialize the payload once
+                    # here and share the encode between the log
+                    # (put_event_blob) and the wire (superframe payload)
+                    e.cache_blob()
                 txn.log_event(e, UNDONE)
                 if not self.replay_mode:
                     txn.put_event_data(e)

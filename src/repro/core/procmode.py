@@ -595,6 +595,10 @@ class ProcessEngineDriver:
         # _op_stats_base when the incarnation dies)
         self._op_stats_base: Dict[str, Dict[str, int]] = {}
         self._op_stats_live: Dict[str, Dict[str, int]] = {}
+        # wire-level transport counters (superframes/bytes/coalescing),
+        # same base/live split per group
+        self._wire_base: Dict[str, Dict[str, int]] = {}
+        self._wire_live: Dict[str, Dict[str, int]] = {}
         with self.lock:
             self.ch_by_name = {ch.name: ch for ch in self.e.channels}
         self.transport = make_supervisor_transport(engine.transport, self)
@@ -609,6 +613,10 @@ class ProcessEngineDriver:
 
     def record_stats(self, group: str, stats: Dict[str, dict]):
         """Live per-operator counters from a worker (under self.lock)."""
+        stats = dict(stats)
+        wire = stats.pop("__wire__", None)
+        if wire is not None:
+            self._wire_live[group] = dict(wire)
         self._op_stats_live[group] = {
             op: s.get("events_in", 0) + s.get("events_out", 0)
             for op, s in stats.items()}
@@ -852,9 +860,7 @@ class ProcessEngineDriver:
             if t is not None:
                 t.join(timeout=5.0)
         with self.lock:
-            base = self._op_stats_base.setdefault(group, {})
-            for op, n in self._op_stats_live.pop(group, {}).items():
-                base[op] = base.get(op, 0) + n
+            self._fold_stats_locked(group)
             h.restarts += 1
             if h.restarts > MAX_RESTARTS_PER_GROUP:
                 self.e.group_state[group] = "failed"
@@ -911,9 +917,7 @@ class ProcessEngineDriver:
                 t.join(timeout=5.0)
         with self.lock:
             h.alive = False
-            base = self._op_stats_base.setdefault(group, {})
-            for op, n in self._op_stats_live.pop(group, {}).items():
-                base[op] = base.get(op, 0) + n
+            self._fold_stats_locked(group)
             if remove:
                 self.workers.pop(group, None)
 
@@ -936,6 +940,16 @@ class ProcessEngineDriver:
         is gone)."""
         return self.transport.wait_group_drained(group, timeout)
 
+    def _fold_stats_locked(self, group: str) -> None:
+        """An incarnation died/stopped: fold its live counters into the
+        cumulative base (driver lock held)."""
+        base = self._op_stats_base.setdefault(group, {})
+        for op, n in self._op_stats_live.pop(group, {}).items():
+            base[op] = base.get(op, 0) + n
+        wbase = self._wire_base.setdefault(group, {})
+        for k, n in self._wire_live.pop(group, {}).items():
+            wbase[k] = wbase.get(k, 0) + n
+
     def op_stats(self) -> Dict[str, int]:
         """Cumulative processed-event counters per operator across worker
         incarnations (benchmark instrumentation)."""
@@ -947,6 +961,24 @@ class ProcessEngineDriver:
             for g, ops in self._op_stats_live.items():
                 for op, n in ops.items():
                     out[op] = out.get(op, 0) + n
+            return out
+
+    def wire_stats(self) -> Dict[str, float]:
+        """Cumulative wire-protocol counters across all workers and
+        incarnations (byte transports only; empty under ``routed``):
+        superframes, bytes, events and control entries carried, plus the
+        derived coalescing ratios the benchmarks report."""
+        with self.lock:
+            out: Dict[str, float] = {}
+            for src in (self._wire_base, self._wire_live):
+                for g, w in src.items():
+                    for k, n in w.items():
+                        out[k] = out.get(k, 0) + n
+            if out.get("frames"):
+                out["events_per_frame"] = out.get("events", 0) / out["frames"]
+            if out.get("ctrl_frames"):
+                out["ctrl_per_ctrl_frame"] = (out.get("ctrl", 0)
+                                              / out["ctrl_frames"])
             return out
 
     def wait(self, timeout: float) -> bool:

@@ -318,9 +318,11 @@ def process_transport_names():
 
 def _load():
     # import side-effect registration; lazy so local-only users never pay
-    # (socketmode registers both "socket" and "tcp" — the AF_INET family)
+    # (socketmode registers both "socket" and "tcp" — the AF_INET family;
+    # shmring registers "shm" — rings for co-located pairs, socket across)
     if "routed" not in _REGISTRY:
-        from repro.core.transport import routed, socketmode  # noqa: F401
+        from repro.core.transport import (routed, shmring,  # noqa: F401
+                                          socketmode)
 
 
 def make_supervisor_transport(name: str, driver) -> SupervisorTransport:

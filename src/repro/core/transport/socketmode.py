@@ -1,30 +1,41 @@
 """The ``socket`` / ``tcp`` transports: direct worker-to-worker channels.
 
 Event payloads travel on point-to-point sockets between worker processes
-(`multiprocessing.connection`, one duplex connection per sender-group ->
-receiver-group pair, channels multiplexed by name); the supervisor never
-touches an event.  The listener **family is per-engine configuration**
+(one duplex connection per sender-group -> receiver-group pair, channels
+multiplexed by name); the supervisor never touches an event.  The
+connection handshake still speaks `multiprocessing.connection` (the
+per-run ``authkey`` HMAC challenge + a ``hello`` frame), but once a pair
+is introduced both sides drop to a **batched binary wire protocol**
+(:mod:`repro.core.transport.wire`): every event, ack, defer and release
+queued for a peer since the last flusher wakeup coalesces into one
+length-prefixed superframe written with a single vectored write.  Event
+payloads are pickled exactly once (``Event.cache_blob`` — the same bytes
+the log persists via ``put_event_blob``) and travel as buffer slices;
+reconnect-replay re-transmits the cached blob without re-pickling.  Acks
+are *delayed*: a flush that would carry only control entries lingers for
+a small ``ack_flush`` window (default 2ms) so credit grants piggyback on
+each other (and on any event heading the other way is not possible —
+acks flow opposite to events — so they batch among themselves); any
+queued event flushes immediately.
+
+The listener **family is per-engine configuration**
 (``transport_options={"family": "unix" | "inet"}``), not an import-time
 constant: ``socket`` defaults to ``AF_UNIX`` where available, and the
 registered ``tcp`` transport is the same implementation pinned to
 ``AF_INET`` — ``(host, port)`` listener addresses brokered through the
 supervisor, so workers need not share a filesystem (the multi-host
-prerequisite).  Every connection — worker listener accept and peer dial —
-is authenticated with the engine's per-run ``authkey`` (the
-``multiprocessing.connection`` HMAC challenge), because a TCP listener is
-reachable by anything on the network, unlike a mode-0600 unix socket.
+prerequisite).
 
 The supervisor retains only the authoritative *recovery* view: the log.
-The **sender-side worker holds the reliable
-buffer** for each of its channels, bounded at the credit window (= the
-channel capacity): ``put`` appends + transmits and blocks while the buffer
-is full; the receiver's ``ack``/``release`` frames returning over the
-socket are the credit grants that free a slot.  Deferred acks advance a
-pending cursor on the sender's buffer and keep holding their credit until
-``release`` (the durability-watermark rule), exactly like the local
-transport.
+The **sender-side worker holds the reliable buffer** for each of its
+channels, bounded at the credit window (= the channel capacity): ``put``
+appends + enqueues for the wire and blocks while the buffer is full; the
+receiver's ``ack``/``release`` entries returning over the socket are the
+credit grants that free a slot.  Deferred acks advance a pending cursor
+on the sender's buffer and keep holding their credit until ``release``
+(the durability-watermark rule), exactly like the local transport.
 
-Ack frames carry the event id and the sender matches them against its
+Ack entries carry the event id and the sender matches them against its
 FIFO head, so a stale ack (a duplicate the receiver obsolete-filtered
 after a reconnect) can never pop the wrong event.
 
@@ -33,10 +44,11 @@ Crash anatomy (why a lost buffer is safe):
 * **receiver dies** — the sender's buffer still holds every unreleased
   event.  The supervisor respawns the receiver, which reports a fresh
   listener address; the supervisor brokers it to the senders, which
-  reconnect, ``reset_pending`` and re-transmit the whole buffer suffix.
-  The receiver's obsolete filter (rebuilt from the log by Alg 9) drops
-  the already-recovered prefix.  Blocked puts wake as the fresh receiver
-  acks — a SIGKILL'd receiver never strands a sender.
+  reconnect, ``reset_pending`` and re-transmit the whole buffer suffix
+  (cached blobs, no re-pickle).  The receiver's obsolete filter (rebuilt
+  from the log by Alg 9) drops the already-recovered prefix.  Blocked
+  puts wake as the fresh receiver acks — a SIGKILL'd receiver never
+  strands a sender.
 * **sender dies** — its buffer is gone, but every buffered event was
   logged before send (Alg 3 step 4 precedes step 5), so the respawned
   worker's recovery resends the undone + unacknowledged suffix from the
@@ -45,15 +57,21 @@ Crash anatomy (why a lost buffer is safe):
   (their InSet assignment) and are not resent.
 * **whole tree dies** — both cases at once, per group, on restart.
 
-Termination detection: with no central router the supervisor cannot count
-deliveries, so it runs a two-wave probe (Mattern-style).  Workers publish
-a snapshot only at main-loop iteration boundaries (never mid-transaction):
-monotonic activity counter, send-buffer occupancy, unprocessed receive
-backlog, deferred effects, exhaustion.  The run is complete when two
-consecutive probe waves return all-empty snapshots with unchanged
-activity counters from unchanged incarnations.  An event in flight always
-occupies its sender's buffer (it leaves only on an ack), so "all send
-buffers empty" covers the wire.
+A queued-but-unwritten entry is covered by the same invariant that
+covers the wire: the event still occupies its sender channel's buffer
+(it leaves only on an ack), so "all send buffers empty" subsumes the
+flusher queues.  Delayed acks merely postpone quiescence by at most the
+``ack_flush`` window.
+
+Termination detection: with no central router the supervisor cannot
+count deliveries, so it runs a two-wave probe (Mattern-style).  Workers
+publish a snapshot only at main-loop iteration boundaries (never
+mid-transaction): monotonic activity counter, send-buffer occupancy,
+unprocessed receive backlog, deferred effects, exhaustion.  The run is
+complete when two consecutive probe waves return all-empty snapshots
+with unchanged activity counters from unchanged incarnations.  An event
+in flight always occupies its sender's buffer (it leaves only on an
+ack), so "all send buffers empty" covers the wire.
 """
 from __future__ import annotations
 
@@ -65,9 +83,16 @@ from multiprocessing import AuthenticationError
 from multiprocessing import connection as mpc
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.events import Event
+from repro.core.transport import wire
 from repro.core.transport.base import (SupervisorTransport, WorkerBootstrap,
                                        WorkerTransport, register_transport)
 from repro.core.transport.local import Channel
+
+#: default linger before flushing an ack-only wire queue (seconds) —
+#: long enough to coalesce the ack burst a processing loop emits,
+#: short enough to be invisible next to the credit window
+DEFAULT_ACK_FLUSH = 0.002
 
 
 def default_family() -> str:
@@ -91,29 +116,129 @@ def _listener_for(options: Dict) -> mpc.Listener:
                      "(expected 'unix' or 'inet')")
 
 
-class _Conn:
-    """A peer connection + send lock + liveness flag. Frames are sent
-    best-effort: a dead peer's frames are dropped (the log, not the wire,
-    is the recovery authority)."""
+# ---------------------------------------------------------------------------
+# batched peer connections
+# ---------------------------------------------------------------------------
 
-    def __init__(self, conn):
-        self.conn = conn
-        self.lock = threading.Lock()
+class BatchedConn:
+    """A peer connection with a wire queue and a flusher thread.
+
+    ``send_event``/``send_ctrl`` only append to the queue (cheap, called
+    under channel locks); the flusher drains the queue into superframes.
+    Entries for a dead peer are dropped best-effort — the log, not the
+    wire, is the recovery authority.  Subclasses supply the byte I/O
+    (socket fd here, shared-memory ring in ``shmring``).
+    """
+
+    def __init__(self, ack_flush: float = DEFAULT_ACK_FLUSH):
         self.alive = True
+        self._q: List[Tuple] = []
+        self._cv = threading.Condition()
+        self._urgent = False        # an event entry is queued: flush now
+        self._wt: Optional["SocketWorker"] = None
+        self._ack_flush = ack_flush
 
-    def send(self, frame) -> bool:
-        with self.lock:
+    # -- producer side (channel locks held) --------------------------------
+    def send_event(self, name: str, event_id: int, blob: bytes) -> bool:
+        with self._cv:
             if not self.alive:
                 return False
+            self._q.append(("ev", name, event_id, blob))
+            self._urgent = True
+            self._cv.notify()
+            return True
+
+    def send_ctrl(self, kind: str, name: str, event_id: int) -> bool:
+        with self._cv:
+            if not self.alive:
+                return False
+            self._q.append((kind, name, event_id))
+            self._cv.notify()
+            return True
+
+    # -- threads -----------------------------------------------------------
+    def start(self, wt: "SocketWorker", tag: str) -> None:
+        self._wt = wt
+        threading.Thread(target=self._flush_loop, daemon=True,
+                         name=f"wire-flush-{tag}").start()
+        threading.Thread(target=self._read_loop, daemon=True,
+                         name=f"wire-read-{tag}").start()
+
+    def _flush_loop(self):
+        while True:
+            with self._cv:
+                while self.alive and not self._q:
+                    self._cv.wait()
+                if not self.alive:
+                    return
+                if not self._urgent and self._ack_flush > 0:
+                    # ack-only queue: linger so credit grants coalesce;
+                    # any event arriving during the linger flushes now
+                    deadline = time.monotonic() + self._ack_flush
+                    while self.alive and not self._urgent:
+                        left = deadline - time.monotonic()
+                        if left <= 0:
+                            break
+                        self._cv.wait(left)
+                    if not self.alive:
+                        return
+                batch, self._q = self._q, []
+                self._urgent = False
             try:
-                self.conn.send(frame)
-                return True
+                self._write_batch(batch)
             except (OSError, ValueError):
                 self.alive = False
-                return False
+                return
+
+    # -- I/O (subclass responsibility) -------------------------------------
+    def _write_batch(self, batch: List[Tuple]) -> None:
+        raise NotImplementedError
+
+    def _read_loop(self) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        with self._cv:
+            self.alive = False
+            self._cv.notify_all()
+
+
+class _WireConn(BatchedConn):
+    """Socket-backed peer connection.  The `multiprocessing.connection`
+    object performed the authkey challenge + hello handshake and now only
+    owns the fd: all subsequent traffic is raw superframes (safe to mix —
+    mpc reads are unbuffered exact-length reads, so nothing of the byte
+    stream is sitting in a library buffer when we take over)."""
+
+    def __init__(self, conn, ack_flush: float = DEFAULT_ACK_FLUSH):
+        super().__init__(ack_flush)
+        self.conn = conn
+        self.fd = conn.fileno()
+
+    def _write_batch(self, batch):
+        bufs, total, n_ev, n_ctrl = wire.encode_superframe(batch)
+        wire.write_buffers(self.fd, bufs, total)
+        wt = self._wt
+        if wt is not None:
+            wt.wire_note(total, n_ev, n_ctrl)
+
+    def _read_loop(self):
+        dec = wire.SuperframeDecoder()
+        wt = self._wt
+        while True:
+            try:
+                data = os.read(self.fd, 1 << 16)
+            except (OSError, ValueError):
+                self.alive = False
+                return
+            if not data:
+                self.alive = False
+                return
+            for entry in dec.feed(data):
+                wt.dispatch(entry)
 
     def close(self):
-        self.alive = False
+        super().close()
         try:
             self.conn.close()
         except OSError:
@@ -128,24 +253,30 @@ class SocketSendChannel(Channel):
     """Sender-held reliable buffer, bounded at the credit window.  Only the
     worker's main thread puts; reader threads apply remote acks.
 
-    FIFO discipline on reconnect: every frame for this channel is sent
-    under the buffer lock, and ``_entry`` (the live connection) becomes
-    visible only once ``resend_all`` has replayed the buffer on it.  A
-    put racing a reconnect therefore either lands before the replay
-    (covered by it, in order) or transmits after it — a fresh frame can
-    never overtake the re-transmission of older buffered events, which
-    would ratchet the receiver's obsolete filter past unprocessed ids
-    and silently drop them."""
+    FIFO discipline on reconnect: every wire entry for this channel is
+    queued under the buffer lock, and ``_entry`` (the live connection)
+    becomes visible only once ``resend_all`` has replayed the buffer on
+    it.  A put racing a reconnect therefore either lands before the
+    replay (covered by it, in order) or queues after it — a fresh entry
+    can never overtake the re-transmission of older buffered events,
+    which would ratchet the receiver's obsolete filter past unprocessed
+    ids and silently drop them.  Each connection's queue drains FIFO into
+    its superframes, preserving the order entries were enqueued."""
+
+    #: tells the operator hot path to pre-pickle (``Event.cache_blob``)
+    #: before logging, so the log and the wire share one encode
+    prefer_blob = True
 
     def __init__(self, wt: "SocketWorker", send_op, send_port, rec_op,
                  rec_port, capacity: int):
         super().__init__(send_op, send_port, rec_op, rec_port,
                          capacity=capacity)
         self._wt = wt
-        self._entry: Optional[_Conn] = None
+        self._entry: Optional[BatchedConn] = None
 
     def put(self, ev, stop_flag=None, timeout: float = 0.05) -> bool:
         wt = self._wt
+        blob = ev.cache_blob()          # pickle once, outside the lock
         with self._cv:
             while len(self._buf) >= self.capacity:
                 if wt.stopped or (stop_flag is not None and stop_flag()):
@@ -157,18 +288,19 @@ class SocketSendChannel(Channel):
             self.total_put += 1
             entry = self._entry
             if entry is not None and entry.alive:
-                entry.send(("ev", self.name, ev))
+                entry.send_event(self.name, ev.event_id, blob)
         wt.bump()
         return True
 
-    def resend_all(self, entry: _Conn):
+    def resend_all(self, entry: BatchedConn):
         """Fresh connection to a (possibly restarted) receiver: rewind the
-        deferred cursor, re-transmit the full buffer suffix in order, and
-        only then adopt the connection for subsequent puts."""
+        deferred cursor, re-queue the full buffer suffix in order (cached
+        blobs — no re-pickle), and only then adopt the connection for
+        subsequent puts."""
         with self._cv:
             self._pending = 0
             for ev in self._buf:
-                entry.send(("ev", self.name, ev))
+                entry.send_event(self.name, ev.event_id, ev.cache_blob())
             self._entry = entry
 
     # -- remote consumption verbs (applied by reader threads) --------------
@@ -200,7 +332,8 @@ class SocketSendChannel(Channel):
 class SocketRecvChannel(Channel):
     """Receiver-side replica: reader threads deliver, the main loop
     consumes, and each consumption verb returns a credit to the sender as
-    an id-matched ack frame."""
+    an id-matched ack entry (coalesced into the next superframe toward
+    the sender)."""
 
     def __init__(self, wt: "SocketWorker", send_op, send_port, rec_op,
                  rec_port):
@@ -208,7 +341,11 @@ class SocketRecvChannel(Channel):
                          capacity=1_000_000)
         self._wt = wt
 
-    def deliver(self, ev):
+    def deliver_wire(self, event_id: int, header: dict, body) -> None:
+        """Rebuild the event from this channel's identity + the wire
+        payload — routing fields never travel, only (header, body)."""
+        ev = Event(event_id, self.send_op, self.send_port,
+                   self.rec_op, self.rec_port, body=body, header=header)
         with self._cv:
             self._buf.append(ev)
         self._wt.bump()
@@ -216,15 +353,15 @@ class SocketRecvChannel(Channel):
     def put(self, ev, stop_flag=None, timeout: float = 0.05) -> bool:
         raise RuntimeError(f"{self.name}: put on the receiving endpoint")
 
-    def _frame(self, kind: str, ev):
+    def _ctrl(self, kind: str, ev):
         entry = self._wt.conn_in_for(self.name)
         if entry is not None:
-            entry.send((kind, self.name, ev.event_id))
+            entry.send_ctrl(kind, self.name, ev.event_id)
 
     def ack(self):
         ev = super().ack()
         if ev is not None:
-            self._frame("ack", ev)
+            self._ctrl("ack", ev)
             self._wt.bump()
         return ev
 
@@ -236,13 +373,13 @@ class SocketRecvChannel(Channel):
             else:
                 ev = None
         if ev is not None:
-            self._frame("defer", ev)
+            self._ctrl("defer", ev)
             self._wt.bump()
 
     def release_ack(self):
         ev = super().release_ack()
         if ev is not None:
-            self._frame("release", ev)
+            self._ctrl("release", ev)
             self._wt.bump()
         return ev
 
@@ -257,6 +394,8 @@ class SocketWorker(WorkerTransport):
         self.conn = tr_conn
         self.options = dict(bootstrap.transport_options)
         self.authkey = self.options.get("authkey")
+        self.ack_flush = float(self.options.get("ack_flush",
+                                                DEFAULT_ACK_FLUSH))
         self.stopped = False
         self._force = False
         self._reg = threading.Lock()       # conn registries + peer addrs
@@ -264,6 +403,9 @@ class SocketWorker(WorkerTransport):
         self._act_lock = threading.Lock()
         self.activity = 0
         self._snap_lock = threading.Lock()
+        self._wire_lock = threading.Lock()
+        self._wire = {"frames": 0, "bytes": 0, "events": 0,
+                      "ctrl": 0, "ctrl_frames": 0}
         # True while the main loop is inside an iteration (or still in
         # recovery): consumption verbs may have run with their effects
         # (generation, write actions) still pending in-step, invisible to
@@ -297,20 +439,58 @@ class SocketWorker(WorkerTransport):
             else:
                 continue
             self.channels[ch.name] = c
-        self._out: Dict[str, _Conn] = {}           # peer group -> conn
-        self._in: Dict[str, _Conn] = {}
+        self._out: Dict[str, BatchedConn] = {}     # peer group -> conn
+        self._in: Dict[str, BatchedConn] = {}
         self._peer_addr: Dict[str, Tuple] = {}     # peer -> (addr, gen)
         self.listener = _listener_for(self.options)
+        self._setup(bootstrap)
         threading.Thread(target=self._accept_loop, daemon=True,
                          name=f"sock-accept-{group}").start()
         threading.Thread(target=self._control_loop, daemon=True,
                          name=f"sock-ctl-{group}").start()
-        self._tr_send(("addr", self.listener.address))
+        self._tr_send(("addr", self._addr_payload()))
+
+    # -- subclass hooks ----------------------------------------------------
+    def _setup(self, bootstrap: WorkerBootstrap) -> None:
+        """Extra transport state created before the address broadcast
+        (the shm transport allocates its rings here)."""
+
+    def _addr_payload(self):
+        """What the supervisor brokers to peers as this worker's address."""
+        return self.listener.address
+
+    def _dial(self, peer: str, addr) -> Optional[BatchedConn]:
+        """Open a fresh outbound connection to ``peer`` at ``addr`` (not
+        yet started).  None if the peer is unreachable — a newer address
+        broadcast will retry."""
+        try:
+            c = mpc.Client(self._sock_addr(addr), authkey=self.authkey)
+            c.send(("hello", self.group))
+        except (OSError, EOFError, AuthenticationError):
+            return None
+        return _WireConn(c, self.ack_flush)
+
+    def _sock_addr(self, addr):
+        """The socket address inside a brokered address payload."""
+        return addr
+
+    def _on_stop(self) -> None:
+        """Clean-stop resource teardown (shm rings unlink here)."""
 
     # -- plumbing ----------------------------------------------------------
     def bump(self):
         with self._act_lock:
             self.activity += 1
+
+    def wire_note(self, nbytes: int, n_ev: int, n_ctrl: int) -> None:
+        with self._wire_lock:
+            w = self._wire
+            w["frames"] += 1
+            w["bytes"] += nbytes
+            w["events"] += n_ev
+            w["ctrl"] += n_ctrl
+            if n_ctrl:
+                w["ctrl_frames"] += 1
 
     def _tr_send(self, msg):
         with self._tr_send_lock:
@@ -319,10 +499,27 @@ class SocketWorker(WorkerTransport):
             except (OSError, ValueError):
                 pass                      # supervisor gone: we exit soon
 
-    def conn_in_for(self, ch_name: str) -> Optional[_Conn]:
+    def conn_in_for(self, ch_name: str) -> Optional[BatchedConn]:
         with self._reg:
             e = self._in.get(self._peer_of.get(ch_name))
         return e if e is not None and e.alive else None
+
+    def dispatch(self, entry: Tuple) -> None:
+        """Apply one decoded wire entry (called from reader threads)."""
+        kind = entry[0]
+        if kind == "ev":
+            ch = self._recv_chs.get(entry[1])
+            if ch is not None:
+                ch.deliver_wire(entry[2], entry[3], entry[4])
+        else:
+            ch = self._send_chs.get(entry[1])
+            if ch is not None:
+                if kind == "ack":
+                    ch.remote_ack(entry[2])
+                elif kind == "defer":
+                    ch.remote_defer(entry[2])
+                elif kind == "release":
+                    ch.remote_release(entry[2])
 
     # -- threads -----------------------------------------------------------
     def _accept_loop(self):
@@ -347,36 +544,10 @@ class SocketWorker(WorkerTransport):
             if not (isinstance(hello, tuple) and hello[0] == "hello"):
                 c.close()
                 continue
-            entry = _Conn(c)
+            entry = _WireConn(c, self.ack_flush)
             with self._reg:
                 self._in[hello[1]] = entry
-            threading.Thread(target=self._reader, args=(entry,),
-                             daemon=True).start()
-
-    def _reader(self, entry: _Conn):
-        while True:
-            try:
-                frame = entry.conn.recv()
-            except (EOFError, OSError):
-                entry.alive = False
-                return
-            kind = frame[0]
-            if kind == "ev":
-                ch = self._recv_chs.get(frame[1])
-                if ch is not None:
-                    ch.deliver(frame[2])
-            elif kind == "ack":
-                ch = self._send_chs.get(frame[1])
-                if ch is not None:
-                    ch.remote_ack(frame[2])
-            elif kind == "defer":
-                ch = self._send_chs.get(frame[1])
-                if ch is not None:
-                    ch.remote_defer(frame[2])
-            elif kind == "release":
-                ch = self._send_chs.get(frame[1])
-                if ch is not None:
-                    ch.remote_release(frame[2])
+            entry.start(self, f"{hello[1]}->{self.group}")
 
     def _control_loop(self):
         while True:
@@ -398,10 +569,11 @@ class SocketWorker(WorkerTransport):
                     self.listener.close()
                 except OSError:
                     pass
+                self._on_stop()
                 return
 
     def _connect(self, peer: str, addr, gen: int):
-        """(Re)connect to a peer's fresh listener and re-transmit the
+        """(Re)connect to a peer's fresh address and re-transmit the
         reliable buffers of every channel toward it."""
         with self._reg:
             cur = self._peer_addr.get(peer)
@@ -409,18 +581,14 @@ class SocketWorker(WorkerTransport):
             if cur == (addr, gen) and e is not None and e.alive:
                 return                     # duplicate broadcast
             self._peer_addr[peer] = (addr, gen)
-        try:
-            c = mpc.Client(addr, authkey=self.authkey)
-            c.send(("hello", self.group))
-        except (OSError, EOFError, AuthenticationError):
+        entry = self._dial(peer, addr)
+        if entry is None:
             return      # peer died again; a newer broadcast will follow
-        entry = _Conn(c)
         with self._reg:
             old, self._out[peer] = self._out.get(peer), entry
         if old is not None:
-            old.alive = False
-        threading.Thread(target=self._reader, args=(entry,),
-                         daemon=True).start()
+            old.close()
+        entry.start(self, f"{self.group}->{peer}")
         for name, ch in self._send_chs.items():
             if self._peer_of.get(name) == peer:
                 ch.resend_all(entry)
@@ -477,6 +645,10 @@ class SocketWorker(WorkerTransport):
         self.boundary(state)
 
     def send_stats(self, stats: dict) -> None:
+        with self._wire_lock:
+            wire_snap = dict(self._wire)
+        stats = dict(stats)
+        stats["__wire__"] = wire_snap
         self._tr_send(("stats", stats))
 
 
@@ -542,9 +714,15 @@ class SocketSupervisor(SupervisorTransport):
     def before_respawn(self, h):
         d = self.driver
         with d.lock:
-            self.addr.pop(h.group, None)   # stale listener died with it
+            addr = self.addr.pop(h.group, None)  # stale listener died too
             h.probe = None
             self._sig = None
+        if addr is not None:
+            self._reclaim_addr(h.group, addr[0])
+
+    def _reclaim_addr(self, group: str, addr) -> None:
+        """Release any supervisor-reclaimable resources named in a dead
+        group's address payload (shm rings; sockets die with the pid)."""
 
     def after_rewire(self):
         """Topology changed: re-broadcast every known address (workers

@@ -58,10 +58,12 @@ def store_spec(request):
 #
 #   unset             -> routed AND socket (fast local default; tcp-family
 #                        coverage always runs via tests/test_multihost.py)
-#   "all"             -> routed, socket AND tcp (nightly cross)
+#   "all"             -> routed, socket, tcp AND shm (nightly cross)
 #   "routed"          -> the supervisor-pumped pipe transport only
 #   "socket"          -> the direct worker<->worker AF_UNIX transport only
 #   "tcp"             -> the socket transport over AF_INET (host, port)
+#   "shm"             -> shared-memory rings for co-located pairs (socket
+#                        fallback across nodes)
 #   anything else     -> comma list of literal transport names
 # ---------------------------------------------------------------------------
 
@@ -69,7 +71,8 @@ _TRANSPORT_SETS = {
     "routed": ["routed"],
     "socket": ["socket"],
     "tcp": ["tcp"],
-    "all": ["routed", "socket", "tcp"],
+    "shm": ["shm"],
+    "all": ["routed", "socket", "tcp", "shm"],
 }
 
 

@@ -172,9 +172,12 @@ def test_api_surface_snapshot():
 
 def test_channels_shim_warns():
     import importlib
-    import repro.core.channels as ch
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
+        # first import AND reload both inside the catch: the shim's
+        # warning must never leak into the test session (tier-1 is
+        # DeprecationWarning-clean)
+        import repro.core.channels as ch
         importlib.reload(ch)
     assert any(issubclass(w.category, DeprecationWarning) for w in caught)
     # the shim still re-exports the moved names

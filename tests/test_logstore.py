@@ -3,6 +3,7 @@
 sharded routing equivalence, and group-commit crash semantics (a crash
 between flushes loses exactly the unflushed batch)."""
 import os
+import time
 
 import pytest
 
@@ -181,15 +182,30 @@ def test_sqlite_engine_end_to_end(tmp_path):
 # group commit: watermark + crash semantics
 # ---------------------------------------------------------------------------
 
+def _wait_durable(store, token, timeout=5.0):
+    """Flush I/O runs on the store's flusher thread: durability arrives
+    asynchronously shortly after the watermark triggers."""
+    deadline = time.monotonic() + timeout
+    while not store.is_durable(token):
+        assert time.monotonic() < deadline, f"token {token} never durable"
+        time.sleep(0.001)
+
+
 def test_group_commit_watermark_and_tokens():
     store = GroupCommitStore(batch_size=3, interval=60.0)
     tokens = []
-    for i in range(5):
+    for i in range(3):
         txn = store.begin()
         txn.log_event(_ev(i), UNDONE)
         tokens.append(txn.commit())
-    # txns 1-3 flushed at the size watermark; 4-5 still pending
-    assert store.is_durable(tokens[2])
+    # txns 1-3 flush at the size watermark (async flusher thread)
+    _wait_durable(store, tokens[2])
+    # 4-5 stay pending below the watermark (committed post-flush so the
+    # async cut cannot sweep them into the first batch)
+    for i in (3, 4):
+        txn = store.begin()
+        txn.log_event(_ev(i), UNDONE)
+        tokens.append(txn.commit())
     assert not store.is_durable(tokens[4])
     # the speculative view serves reads for all five regardless
     assert [e.event_id for e, _ in store.fetch_resend_events("A")] == \
@@ -200,11 +216,16 @@ def test_group_commit_watermark_and_tokens():
 
 def test_group_commit_crash_loses_exactly_unflushed_batch():
     store = GroupCommitStore(batch_size=3, interval=60.0)
+    tokens = []
     for i in range(5):
         txn = store.begin()
         txn.log_event(_ev(i), UNDONE)
         txn.put_event_data(_ev(i))
-        txn.commit()
+        tokens.append(txn.commit())
+        if i == 2:
+            # batch of 3 flushes asynchronously; park here so 3-4 land
+            # strictly after the cut and form the unflushed batch
+            _wait_durable(store, tokens[2])
     store.crash()
     # events 0-2 were flushed (batch of 3); 3-4 were the unflushed batch
     assert [e.event_id for e, _ in store.fetch_resend_events("A")] == \
@@ -223,10 +244,13 @@ def test_group_commit_over_sqlite(tmp_path):
     path = os.path.join(tmp_path, "g.db")
     store = GroupCommitStore(SqliteLogStore(path), batch_size=2,
                              interval=60.0)
+    tokens = []
     for i in range(5):
         txn = store.begin()
         txn.log_event(_ev(i), UNDONE)
-        txn.commit()
+        tokens.append(txn.commit())
+        if i % 2:
+            _wait_durable(store, tokens[i])     # async batch of 2 lands
     # two batches of 2 flushed; event 4 pending. A crash drops it...
     store.crash()
     assert [e.event_id for e, _ in store.fetch_resend_events("A")] == \

@@ -7,6 +7,8 @@ Invariants:
   P2  LOG.io and ABS commit the same external effects for deterministic
       pipelines.
   P3  captured lineage == ground-truth contributor sets.
+  P4  the batched wire protocol is a lossless, order-preserving codec for
+      arbitrary event/ack interleavings under arbitrary chunking.
 """
 import pytest
 
@@ -109,3 +111,67 @@ def test_lineage_matches_ground_truth(n_windows, window, plan):
         back = backward(eng.store, ("win", "out", i))
         srcs = sorted(k[2] for k in back if k[0] == "src")
         assert srcs == list(range(i * window, (i + 1) * window)), (i, srcs)
+
+
+# ---------------------------------------------------------------------------
+# P4: superframe codec (the byte transports' wire format)
+# ---------------------------------------------------------------------------
+
+_names = st.text(
+    alphabet=st.characters(min_codepoint=33, max_codepoint=0x2FA0),
+    min_size=1, max_size=40)
+_bodies = st.recursive(
+    st.none() | st.booleans() | st.integers() | st.binary(max_size=64)
+    | st.text(max_size=32),
+    lambda children: st.lists(children, max_size=4)
+    | st.dictionaries(st.text(max_size=8), children, max_size=4),
+    max_leaves=8)
+
+_wire_entries = st.lists(
+    st.one_of(
+        st.tuples(st.just("ev"), _names, st.integers(-2**62, 2**62),
+                  st.tuples(st.dictionaries(st.text(max_size=6),
+                                            st.integers(), max_size=3),
+                            _bodies)),
+        st.tuples(st.sampled_from(["ack", "defer", "release"]), _names,
+                  st.integers(-2**62, 2**62)),
+    ),
+    min_size=0, max_size=30)
+
+
+@settings(max_examples=120, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(entries=_wire_entries, data=st.data())
+def test_superframe_roundtrip_any_interleaving(entries, data):
+    from repro.core.transport import wire
+
+    encoded = []
+    for e in entries:
+        if e[0] == "ev":
+            header, body = e[3]
+            encoded.append(("ev", e[1], e[2],
+                            wire.encode_payload(header, body)))
+        else:
+            encoded.append(e)
+    bufs, total, n_ev, n_ctrl = wire.encode_superframe(encoded)
+    assert n_ev + n_ctrl == len(entries)
+    stream = b"".join(bytes(b) for b in bufs)
+    assert len(stream) == total
+
+    # feed the frame in arbitrary chunk sizes
+    dec = wire.SuperframeDecoder()
+    out = []
+    pos = 0
+    while pos < len(stream):
+        k = data.draw(st.integers(1, len(stream) - pos))
+        out.extend(dec.feed(stream[pos:pos + k]))
+        pos += k
+    out.extend(dec.feed(b""))
+    assert dec.pending() == 0
+
+    assert len(out) == len(entries)
+    for orig, got in zip(entries, out):
+        assert got[0] == orig[0] and got[1] == orig[1] and got[2] == orig[2]
+        if orig[0] == "ev":
+            header, body = orig[3]
+            assert got[3] == header and got[4] == body

@@ -1,0 +1,303 @@
+"""The batched wire protocol and the shared-memory rings underneath the
+byte transports: superframe codec round-trips, vectored writes over real
+sockets, ring byte-pipe semantics (wrap, blocking, incarnation resync),
+the shared event-payload encode, and mid-stream SIGKILL with batches and
+coalesced acks in flight on every byte transport."""
+import os
+import pickle
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core import Engine, FailureInjector
+from repro.core.events import Event
+from repro.core.transport import wire
+from repro.core.transport.shmring import ShmRing, sweep_stale_rings
+from tests.helpers import linear_pipeline, mk_store, sink_outputs
+
+# ---------------------------------------------------------------------------
+# superframe codec
+# ---------------------------------------------------------------------------
+
+
+def _payload(i):
+    return wire.encode_payload({"n": i}, {"v": i, "blob": b"x" * (i % 7)})
+
+
+def _entries(n):
+    """A deterministic interleaving of all entry kinds."""
+    out = []
+    for i in range(n):
+        kind = ("ev", "ack", "defer", "release")[i % 4]
+        name = f"op{i % 3}.out->op{(i + 1) % 3}.in"
+        if kind == "ev":
+            out.append(("ev", name, i, _payload(i)))
+        else:
+            out.append((kind, name, i))
+    return out
+
+
+def _decoded_matches(entries, decoded):
+    assert len(decoded) == len(entries)
+    for ent, dec in zip(entries, decoded):
+        assert dec[0] == ent[0]
+        assert dec[1] == ent[1]
+        assert dec[2] == ent[2]
+        if ent[0] == "ev":
+            header, body = pickle.loads(ent[3])
+            assert dec[3] == header
+            assert dec[4] == body
+
+
+def test_superframe_roundtrip_one_feed():
+    entries = _entries(17)
+    bufs, total, n_ev, n_ctrl = wire.encode_superframe(entries)
+    assert n_ev == len([e for e in entries if e[0] == "ev"])
+    assert n_ctrl == len(entries) - n_ev
+    assert sum(len(b) for b in bufs) == total
+    dec = wire.SuperframeDecoder()
+    out = dec.feed(b"".join(bytes(b) for b in bufs))
+    _decoded_matches(entries, out)
+    assert dec.pending() == 0
+
+
+def test_superframe_roundtrip_byte_by_byte():
+    entries = _entries(9)
+    bufs, total, _, _ = wire.encode_superframe(entries)
+    data = b"".join(bytes(b) for b in bufs)
+    dec = wire.SuperframeDecoder()
+    out = []
+    for i in range(len(data)):
+        out.extend(dec.feed(data[i:i + 1]))
+    _decoded_matches(entries, out)
+    assert dec.pending() == 0
+
+
+def test_multiple_superframes_in_one_chunk():
+    e1, e2 = _entries(5), _entries(8)
+    b1, _, _, _ = wire.encode_superframe(e1)
+    b2, _, _, _ = wire.encode_superframe(e2)
+    data = b"".join(bytes(b) for b in b1) + b"".join(bytes(b) for b in b2)
+    out = wire.SuperframeDecoder().feed(data)
+    _decoded_matches(e1 + e2, out)
+
+
+def test_entry_size_agrees_with_encoder():
+    entries = _entries(12)
+    _, total, _, _ = wire.encode_superframe(entries)
+    assert total == 4 + sum(wire.entry_size(e) for e in entries)
+
+
+def test_empty_superframe():
+    bufs, total, n_ev, n_ctrl = wire.encode_superframe([])
+    assert (n_ev, n_ctrl) == (0, 0)
+    out = wire.SuperframeDecoder().feed(b"".join(bytes(b) for b in bufs))
+    assert out == []
+
+
+def test_write_buffers_over_socketpair():
+    """Vectored writes with partial-write handling deliver the byte
+    stream intact — big payloads against a small kernel buffer force the
+    writev loop through its offset-slice path."""
+    entries = [("ev", "a.out->b.in", i,
+                wire.encode_payload({}, {"big": os.urandom(70_000)}))
+               for i in range(4)]
+    bufs, total, _, _ = wire.encode_superframe(entries)
+    a, b = socket.socketpair()
+    a.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 16384)
+    received = bytearray()
+
+    def drain():
+        while len(received) < total:
+            chunk = b.recv(65536)
+            if not chunk:
+                return
+            received.extend(chunk)
+
+    t = threading.Thread(target=drain)
+    t.start()
+    wire.write_buffers(a.fileno(), bufs, total)
+    t.join(timeout=10)
+    a.close(), b.close()
+    assert len(received) == total
+    out = wire.SuperframeDecoder().feed(bytes(received))
+    assert len(out) == 4
+    for i, dec in enumerate(out):
+        assert dec[2] == i
+
+
+# ---------------------------------------------------------------------------
+# event payload cache (the shared encode)
+# ---------------------------------------------------------------------------
+
+def test_event_blob_cache_roundtrip_and_pickle_exclusion():
+    ev = Event(7, "a", "out", "b", "in", body={"v": 1}, header={"h": 2})
+    assert ev.cached_blob() is None
+    blob = ev.cache_blob()
+    assert ev.cached_blob() is blob
+    assert ev.cache_blob() is blob              # cached, not re-pickled
+    assert pickle.loads(blob) == ({"h": 2}, {"v": 1})
+    # the cache is process-local derived state: never shipped by pickle,
+    # never inherited by clones (their header may diverge)
+    copy = pickle.loads(pickle.dumps(ev))
+    assert copy.cached_blob() is None
+    assert copy.body == ev.body
+    assert ev.clone_for("c", "in2").cached_blob() is None
+
+
+# ---------------------------------------------------------------------------
+# shm rings
+# ---------------------------------------------------------------------------
+
+def _alive():
+    return True
+
+
+def test_ring_byte_pipe_with_wraparound():
+    ring = ShmRing.create(256)
+    try:
+        rng_in, rng_out = [], []
+        # push enough traffic through a tiny ring that the cursors wrap
+        # the capacity many times, reader racing the writer
+        def read_all():
+            got = bytearray()
+            while len(got) < 10_000:
+                chunk = ring.read_avail()
+                if chunk:
+                    got.extend(chunk)
+                else:
+                    time.sleep(0.0002)
+            rng_out.append(bytes(got))
+
+        t = threading.Thread(target=read_all)
+        t.start()
+        for i in range(100):
+            chunk = bytes([i % 251]) * 100
+            rng_in.append(chunk)
+            ring.write_bytes(chunk, _alive)
+        t.join(timeout=10)
+        assert rng_out and rng_out[0] == b"".join(rng_in)
+    finally:
+        ring.unlink()
+        ring.close()
+
+
+def test_ring_attach_handshake_and_writer_resync():
+    """The generation dance: a fresh attacher-writer must not publish
+    until the creator-reader discarded the dead incarnation's bytes; a
+    fresh attacher-reader must start at a frame boundary."""
+    ring = ShmRing.create(1024)
+    try:
+        # dead incarnation left a partial frame in the ring
+        ring.write_bytes(b"\xff" * 10, _alive)
+        att = ShmRing.attach(ring.name)
+        done = []
+
+        def handshake():
+            assert att.attacher_handshake(_alive)
+            att.write_bytes(b"fresh", _alive)
+            done.append(True)
+
+        t = threading.Thread(target=handshake)
+        t.start()
+        time.sleep(0.05)
+        assert not done          # blocked until the creator acknowledges
+        assert ring.reader_resync_check()       # discards the 10 bytes
+        t.join(timeout=10)
+        assert done
+        assert not ring.reader_resync_check()
+        assert ring.read_avail() == b"fresh"
+        att.close()
+    finally:
+        ring.unlink()
+        ring.close()
+
+
+def test_ring_creator_writer_resyncs_for_fresh_reader():
+    """Ack-ring shape: the creator writes, a respawned attacher reads.
+    Unread bytes addressed to the dead reader are discarded before the
+    next frame so the fresh reader starts on a boundary."""
+    ring = ShmRing.create(1024)
+    try:
+        ring.write_bytes(b"stale-acks", _alive)     # never read
+        att = ShmRing.attach(ring.name)
+        got = []
+
+        def attach_read():
+            assert att.attacher_handshake(_alive)
+            deadline = time.time() + 10
+            while time.time() < deadline:
+                chunk = att.read_avail()
+                if chunk:
+                    got.append(chunk)
+                    return
+                time.sleep(0.0005)
+
+        t = threading.Thread(target=attach_read)
+        t.start()
+        time.sleep(0.05)
+        ring.write_bytes(b"fresh-acks", _alive)     # resyncs, then writes
+        t.join(timeout=10)
+        assert got == [b"fresh-acks"]
+        att.close()
+    finally:
+        ring.unlink()
+        ring.close()
+
+
+def test_sweep_stale_rings_reclaims_dead_pid_names():
+    ring = ShmRing.create(128)
+    name = ring.name
+    ring.close()
+    # forge a dead-creator name: pid 2**22-odd is (virtually) never live
+    stale = f"logio-{2**22 - 1}-0"
+    import multiprocessing.shared_memory as sm
+    seg = sm.SharedMemory(name=stale, create=True, size=128)
+    from multiprocessing import resource_tracker
+    try:
+        resource_tracker.unregister(seg._name, "shared_memory")
+    except Exception:
+        pass
+    seg.close()
+    swept = sweep_stale_rings()
+    assert swept >= 1
+    with pytest.raises(FileNotFoundError):
+        sm.SharedMemory(name=stale)
+    # this process is alive: its ring survives the sweep
+    reattach = ShmRing.attach(name)
+    reattach.close()
+    ShmRing.attach(name).unlink()
+
+
+# ---------------------------------------------------------------------------
+# mid-stream SIGKILL with batching in flight, across every byte transport
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transport", ["socket", "tcp", "shm"])
+@pytest.mark.parametrize("victim,point", [
+    ("map", "post_send"),            # sender dies with superframes queued
+    ("win", "post_ack_log"),         # receiver dies with coalesced acks
+])
+def test_sigkill_mid_batch(transport, victim, point):
+    """Exactly-once under real process death while superframes and
+    delayed acks are in flight, on each byte transport (the group-commit
+    store keeps acks deferred, so kills land with coalesced credit grants
+    pending)."""
+    build, expected = linear_pipeline(n_events=120, window=4,
+                                      sink_target=30, writes=1)
+    inj = FailureInjector([(victim, point, 7)])
+    eng = Engine(build(), mode="process", transport=transport,
+                 store=mk_store("sqlite+group", batch_size=4,
+                                interval=0.001),
+                 injector=inj, restart_delay=0.02)
+    eng.start()
+    ok = eng.wait(90)
+    eng.stop()
+    assert ok, (transport, victim, point)
+    assert sink_outputs(eng) == expected
+    assert eng.failures == 1
+    stats = eng.wire_stats()
+    assert stats.get("frames", 0) > 0
+    assert stats.get("events", 0) > 0
