@@ -1,0 +1,192 @@
+"""Lineage query latency sweep: backward/forward/slice vs log size x
+backend (memory / sqlite / segment), predicate pushdown on vs off.
+
+The queryable-lineage claim (Sec. 7.3) is that audit queries are a product
+feature, not an offline log dump: a filtered backward query must be
+answered from indexes (memory secondary maps, SQL WHERE over the lineage
+mirror, segment sidecar-summary skipping) rather than a full scan of
+EVENT_LINEAGE x EVENT_LOG. This sweep measures both arms of every query —
+``pushdown`` (the filtered store ops) and ``scan`` (the legacy full-scan
+ops + client-side filtering) — and asserts the no-full-scan property on
+the store scan counters:
+
+  * sqlite: rows_scanned for one filtered backward step stays O(result),
+    nowhere near the lineage table size;
+  * segment: the offline sidecar reader skips sealed segments whose
+    summary proves they cannot match.
+
+Run:  PYTHONPATH=src:. python benchmarks/lineage_query.py [--rows N]
+CSV:  name,us_per_query,queries_per_sec
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+from functools import partial
+
+from repro.core import (CountWindowOperator, Engine, GeneratorSource,
+                        LineageFilter, LineageQuery, LineageScope,
+                        MapOperator, Pipeline, ReadSource, TerminalSink)
+from repro.core.logstore import StoreConfig, build_store
+
+WINDOW = 4
+
+
+def _double(b):
+    return {"v": b["v"] * 2}
+
+
+def _wsum(bs):
+    return {"s": sum(b["v"] for b in bs)}
+
+
+def _build(n_events: int):
+    p = Pipeline()
+    p.add(partial(GeneratorSource, "src",
+                  ReadSource([{"v": i} for i in range(n_events)])))
+    p.add(partial(MapOperator, "map", fn=_double))
+    p.add(partial(CountWindowOperator, "win", WINDOW, agg=_wsum))
+    p.add(partial(TerminalSink, "sink", target=n_events // WINDOW))
+    p.connect("src", "out", "map", "in")
+    p.connect("map", "out", "win", "in")
+    p.connect("win", "out", "sink", "in")
+    return p
+
+
+def populate(store, n_events: int):
+    """Run the linear pipeline once with lineage capture on, leaving the
+    store holding ~2.25 rows of EVENT_LINEAGE per source event."""
+    eng = Engine(_build(n_events), store=store, mode="thread",
+                 lineage_scopes=[LineageScope(("src", "out"),
+                                              ("win", "out"))])
+    eng.start()
+    if not eng.wait(300.0):
+        raise TimeoutError("lineage population run did not finish")
+    eng.stop()
+    return eng.store
+
+
+def _measure(fn, repeats: int) -> float:
+    best = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best
+
+
+def sweep(rows_per_backend: int = 2000, queries: int = 50, repeats: int = 2,
+          sqlite: bool = True, segment: bool = True):
+    n_events = rows_per_backend
+    n_wins = n_events // WINDOW
+    tmp = tempfile.mkdtemp(prefix="lineage_query_bench_")
+    backends = [("memory", lambda: build_store("memory"))]
+    if sqlite:
+        backends.append(("sqlite", lambda: build_store(
+            "sqlite", path=os.path.join(tmp, "log.db"))))
+    if segment:
+        backends.append(("segment", lambda: build_store(StoreConfig(
+            base="segment", path=os.path.join(tmp, "segs"),
+            segment_bytes=64 * 1024, checkpoint_interval=0))))
+
+    flt = LineageFilter(ops={"src", "map"})
+    results = []
+    verdicts = []
+    for bname, mk in backends:
+        store = populate(mk(), n_events)
+        qs = {True: LineageQuery(store, pushdown=True),
+              False: LineageQuery(store, pushdown=False)}
+        wkeys = [("win", "out", (i * 7919) % n_wins) for i in range(queries)]
+        skeys = [("src", "out", (i * 7919) % n_events)
+                 for i in range(queries)]
+        workloads = [
+            ("backward", lambda q: [q.backward(k, where=flt) for k in wkeys]),
+            ("forward", lambda q: [q.forward(k, "map") for k in skeys]),
+            ("slice", lambda q: [q.slice(k) for k in wkeys]),
+        ]
+        perf = {}
+        for wname, work in workloads:
+            for pd in (True, False):
+                arm = "pushdown" if pd else "scan"
+                dt = _measure(lambda q=qs[pd], w=work: w(q), repeats)
+                qps = queries / dt
+                perf[(wname, pd)] = qps
+                results.append((f"lineage_query/{bname}/{wname}/{arm}"
+                                f"/throughput", 1e6 * dt / queries,
+                                round(qps, 1)))
+                print(f"lineage_query/{bname}/{wname}/{arm},"
+                      f"{1e6 * dt / queries:.1f},{qps:.0f}", flush=True)
+        ratio = perf[("backward", True)] / perf[("backward", False)]
+        verdicts.append((bname, ratio))
+        print(f"# {bname}: pushdown vs scan on filtered backward = "
+              f"{ratio:.1f}x {'OK (>1x)' if ratio > 1.0 else 'BELOW TARGET'}",
+              flush=True)
+
+        # ---- no-full-scan assertions on the scan counters ---------------
+        store.reset_query_stats()
+        qs[True].backward(("win", "out", n_wins // 2), where=flt)
+        pushed = store.query_stats()["rows_scanned"]
+        store.reset_query_stats()
+        qs[False].backward(("win", "out", n_wins // 2), where=flt)
+        scanned = store.query_stats()["rows_scanned"]
+        assert pushed < scanned / 10, (
+            f"{bname}: filtered backward scanned {pushed} rows with "
+            f"pushdown vs {scanned} without — the index is not being used")
+        print(f"# {bname}: filtered backward rows_scanned {pushed} "
+              f"(pushdown) vs {scanned} (full scan)", flush=True)
+
+        if bname == "segment":
+            reader = store.lineage_reader()
+            reader.query_lineage(
+                LineageFilter(ops={"win"}, ssn_min=0, ssn_max=0))
+            st = reader.query_stats()
+            assert st["segments_skipped"] >= 1, (
+                f"sidecar summaries skipped nothing: {st}")
+            print(f"# segment sidecar reader: {st['segments_skipped']} "
+                  f"segments skipped, {st['segments_scanned']} scanned, "
+                  f"{st['rows_scanned']} rows", flush=True)
+        store.close()
+    return results, verdicts
+
+
+def run(rows, repeats: int = 1, full: bool = False, quick: bool = False):
+    """``benchmarks.run`` section adapter (perf-gate throughput rows)."""
+    n = 5000 if full else (400 if quick else 2000)
+    results, _ = sweep(rows_per_backend=n, queries=20 if quick else 50,
+                       repeats=max(repeats, 1))
+    rows.extend(results)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=2000,
+                    help="source events per backend (lineage rows ~2.25x)")
+    ap.add_argument("--queries", type=int, default=50)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--no-sqlite", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: small log, few queries")
+    ap.add_argument("--json", default=None,
+                    help="also write results as JSON (perf-trajectory "
+                         "artifact)")
+    args = ap.parse_args()
+    if args.quick:
+        args.rows, args.queries, args.repeats = \
+            min(args.rows, 400), min(args.queries, 20), 1
+    print("name,us_per_query,queries_per_sec", flush=True)
+    results, verdicts = sweep(rows_per_backend=args.rows,
+                              queries=args.queries, repeats=args.repeats,
+                              sqlite=not args.no_sqlite)
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": u, "derived": d}
+                       for n, u, d in results], f, indent=2)
+        print(f"# wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

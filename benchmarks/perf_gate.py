@@ -9,8 +9,9 @@ noisy shared runner.
 
 Metrics compared (higher is better):
   * rows named ``*throughput*`` in the name/us_per_call/derived files
-    (BENCH_pipeline.json, BENCH_process.json, BENCH_transport.json) —
-    ``derived`` is the events/sec figure;
+    (BENCH_pipeline.json, BENCH_process.json, BENCH_transport.json,
+    BENCH_lineage.json) — ``derived`` is the events/sec (or queries/sec)
+    figure;
   * ``events_per_sec`` per config in BENCH_logstore.json.
 
 Usage:
@@ -30,7 +31,8 @@ from pathlib import Path
 from typing import Dict, Optional
 
 BENCH_FILES = ("BENCH_pipeline.json", "BENCH_process.json",
-               "BENCH_transport.json", "BENCH_logstore.json")
+               "BENCH_transport.json", "BENCH_logstore.json",
+               "BENCH_lineage.json")
 
 
 def _find(root: Path, fname: str) -> Optional[Path]:

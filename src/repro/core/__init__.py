@@ -16,15 +16,22 @@ from repro.core.transport import Channel, ChannelClosed
 from repro.core.transport.base import Placement, WorkerBootstrap
 from repro.core.events import Event, ReadAction
 from repro.core.lineage import LineageScope, backward, enabled_ports, forward
-from repro.core.logstore import (GroupCommitStore, LogBackend, MemoryLogStore,
-                                 NullLogStore, SegmentLogStore,
+from repro.core.lineagequery import (EventKey, LineageQuery, LineageResult,
+                                     LineageSlice)
+from repro.core.logstore import (GroupCommitStore, LineageFilter, LogBackend,
+                                 MemoryLogStore, NullLogStore, SegmentLogStore,
                                  ShardedLogStore, SqliteLogStore, StoreConfig,
                                  TxnAborted, build_store)
 from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
                                  ReadSource, SimulatedCrash)
+from repro.core.replay import ReplayMismatch, ReplayReport
 
 __all__ = [
     "Engine",
+    "EventKey",
+    "LineageFilter",
+    "LineageQuery",
+    "LineageScope",
     "LocalCluster",
     "LogioAPI",
     "Pipeline",

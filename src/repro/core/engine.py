@@ -551,6 +551,23 @@ class Engine:
         for ch in self.channels:
             ch.close()
 
+    def replay(self, outputs, scope=None, *, mode: Optional[str] = None,
+               depth: int = 64, timeout: float = 60.0, injector=None,
+               check: bool = True):
+        """Partial replay-from-lineage: rederive ``outputs`` (EventKeys or
+        raw ``(op, port, ssn)`` tuples) by re-executing only the operators
+        in their lineage slice, feeding logged source payloads back in.
+        ``scope`` (a LineageScope) bounds the walk at its start operator.
+        Runs on a fresh in-memory store in ``mode`` ("thread" default, or
+        "process"); ``injector`` installs a FailureInjector in the replay
+        run. Returns a :class:`repro.core.replay.ReplayReport`; with
+        ``check=True`` raises :class:`repro.core.replay.ReplayMismatch`
+        when a deterministic slice fails to reproduce byte-identically."""
+        from repro.core.replay import replay_from_log
+        return replay_from_log(self, outputs, scope=scope, mode=mode,
+                               depth=depth, timeout=timeout,
+                               injector=injector, check=check)
+
     # ------------------------------------------------------------------
     # deterministic single-threaded mode (property tests)
     # ------------------------------------------------------------------

@@ -10,8 +10,9 @@ for those ports of OP. Queries join EVENT_LINEAGE x EVENT_LOG:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import defaultdict
-from typing import Dict, List, Sequence, Set, Tuple
+from typing import Dict, FrozenSet, List, Sequence, Set, Tuple
 
 from repro.core.logstore import LogBackend
 
@@ -20,6 +21,18 @@ from repro.core.logstore import LogBackend
 class LineageScope:
     start: Tuple[str, str]     # (op_id, output_port)
     target: Tuple[str, str]    # (op_id, output_port)
+
+    def __post_init__(self):
+        for name in ("start", "target"):
+            val = getattr(self, name)
+            if isinstance(val, list):
+                val = tuple(val)
+                object.__setattr__(self, name, val)
+            if not (isinstance(val, tuple) and len(val) == 2
+                    and all(isinstance(x, str) and x for x in val)):
+                raise ValueError(
+                    f"LineageScope.{name} must be an (op_id, port) pair of "
+                    f"non-empty strings (got {val!r})")
 
 
 def _paths(pipeline, start: Tuple[str, str], target: Tuple[str, str]
@@ -36,23 +49,26 @@ def _paths(pipeline, start: Tuple[str, str], target: Tuple[str, str]
     out_ports[target[0]].add(target[1])
     results = []
 
-    def walk(port, path):
+    def walk(port, path, traversed: FrozenSet[Tuple]):
+        """``traversed`` carries the path's consecutive (port, port) pairs
+        as a set — membership is O(1) instead of rebuilding the full edge
+        list per candidate (quadratic in path length on wide diamonds)."""
         if port == target:
             results.append(path)
             return
-        op = port[0]
         # from an output port follow connections to input ports
         for (s, sp), (d, dp) in edges:
             if (s, sp) == port:
                 # enter operator d at dp, then leave via each of its outputs
                 for op_out in out_ports.get(d, ()):  # (d, op_out)
-                    if ((d, dp), (d, op_out)) not in [(path[i], path[i + 1])
-                                                      for i in range(len(path) - 1)]:
-                        walk((d, op_out), path + [(d, dp), (d, op_out)])
+                    step = ((d, dp), (d, op_out))
+                    if step not in traversed:
+                        walk((d, op_out), path + [(d, dp), (d, op_out)],
+                             traversed | {(port, (d, dp)), step})
                 if not out_ports.get(d) and (d, dp) == target:
                     results.append(path + [(d, dp)])
 
-    walk(start, [start])
+    walk(start, [start], frozenset())
     return results
 
 
@@ -77,52 +93,29 @@ def enabled_ports(pipeline, scopes: Sequence[LineageScope]
 
 
 # ---------------------------------------------------------------------------
-# queries
+# queries — deprecated free-function surface
 # ---------------------------------------------------------------------------
+# The walks moved to repro.core.lineagequery.LineageQuery (typed EventKey
+# results, scan-time filtering, bounded growth). These shims keep the old
+# tuple-list signatures working one release longer.
 
 def backward(store: LogBackend, event_key: Tuple[str, str, int],
              depth: int = 64) -> List[Tuple[str, str, int]]:
-    """Input events (transitively) used to produce ``event_key`` =
-    (send_op, send_port, event_id). Returns source-most event keys plus all
-    intermediate contributors, ordered."""
-    seen: Set[Tuple] = set()
-    frontier = [event_key]
-    contributors: List[Tuple[str, str, int]] = []
-    for _ in range(depth):
-        nxt = []
-        for ev in frontier:
-            op = ev[0]
-            for inset in store.lineage_insets_of(ev):
-                for ik in store.lineage_events_of_inset(op, inset):
-                    if ik not in seen:
-                        seen.add(ik)
-                        contributors.append(ik)
-                        nxt.append(ik)
-        if not nxt:
-            break
-        frontier = nxt
-    return contributors
+    """Deprecated: use ``LineageQuery(store).backward(key)``."""
+    warnings.warn(
+        "repro.core.lineage.backward is deprecated; use "
+        "repro.core.LineageQuery(store).backward(key)",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.lineagequery import LineageQuery
+    return LineageQuery(store).backward(event_key, depth=depth).keys()
 
 
 def forward(store: LogBackend, event_key: Tuple[str, str, int],
             rec_op: str, depth: int = 64) -> List[Tuple[str, str, int]]:
-    """Output events (transitively) derived from ``event_key`` as consumed
-    by ``rec_op``."""
-    seen: Set[Tuple] = set()
-    results: List[Tuple[str, str, int]] = []
-    frontier = [(event_key, rec_op)]
-    for _ in range(depth):
-        nxt = []
-        for ev, op in frontier:
-            for inset in store.insets_of_event(ev, op):
-                for ok in store.lineage_outputs_of_inset(op, inset):
-                    if ok not in seen:
-                        seen.add(ok)
-                        results.append(ok)
-                        for consumer in store.consumers_of(ok):
-                            if consumer != op:
-                                nxt.append((ok, consumer))
-        if not nxt:
-            break
-        frontier = nxt
-    return results
+    """Deprecated: use ``LineageQuery(store).forward(key, rec_op)``."""
+    warnings.warn(
+        "repro.core.lineage.forward is deprecated; use "
+        "repro.core.LineageQuery(store).forward(key, rec_op)",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.lineagequery import LineageQuery
+    return LineageQuery(store).forward(event_key, rec_op, depth=depth).keys()

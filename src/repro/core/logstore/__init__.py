@@ -24,7 +24,8 @@ import dataclasses
 import os
 from typing import Optional, Union
 
-from repro.core.logstore.base import LogBackend, LogTransaction, TxnAborted
+from repro.core.logstore.base import (LineageFilter, LogBackend,
+                                      LogTransaction, TxnAborted)
 from repro.core.logstore.batched import GroupCommitStore
 from repro.core.logstore.epoch import (EpochCoordinator,
                                        SqliteEpochCoordinator,
@@ -34,10 +35,11 @@ from repro.core.logstore.segment import SegmentLogStore
 from repro.core.logstore.sharded import ShardedLogStore
 from repro.core.logstore.sqlite import SqliteLogStore
 
-__all__ = ["LogBackend", "LogTransaction", "TxnAborted", "MemoryLogStore",
-           "NullLogStore", "SqliteLogStore", "SegmentLogStore",
-           "ShardedLogStore", "GroupCommitStore", "EpochCoordinator",
-           "SqliteEpochCoordinator", "StoreConfig", "build_store"]
+__all__ = ["LineageFilter", "LogBackend", "LogTransaction", "TxnAborted",
+           "MemoryLogStore", "NullLogStore", "SqliteLogStore",
+           "SegmentLogStore", "ShardedLogStore", "GroupCommitStore",
+           "EpochCoordinator", "SqliteEpochCoordinator", "StoreConfig",
+           "build_store"]
 
 _BASES = ("memory", "sqlite", "segment", "null")
 _MODIFIERS = ("sharded", "group")

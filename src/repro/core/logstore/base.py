@@ -23,9 +23,78 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.events import Event
+
+
+@dataclasses.dataclass(frozen=True)
+class LineageFilter:
+    """Scan-time predicate for the filtered lineage query ops.
+
+    ``ops``/``ports`` restrict results to those sender operators/output
+    ports; ``ssn_min``/``ssn_max`` bound the event id (inclusive). A backend
+    that opts into predicate pushdown (``supports_query_pushdown``) evaluates
+    these *at the scan* — SQL WHERE, secondary indexes, sidecar-index segment
+    skipping — instead of materializing every row. ``epoch_min``/``epoch_max``
+    are *scan hints* for log-structured backends (they bound the flush epochs
+    a durable scan must visit); memory-image backends ignore them, and
+    ``matches`` does not evaluate them, so a hint can only skip I/O, never
+    change results.
+
+    Backends may return a superset restricted by whatever they can evaluate
+    natively; :class:`~repro.core.lineagequery.LineageQuery` re-applies the
+    exact predicate client-side, so pushdown is purely a performance contract.
+    """
+
+    ops: Optional[frozenset] = None
+    ports: Optional[frozenset] = None
+    ssn_min: Optional[int] = None
+    ssn_max: Optional[int] = None
+    epoch_min: Optional[int] = None
+    epoch_max: Optional[int] = None
+
+    def __post_init__(self):
+        for name in ("ops", "ports"):
+            val = getattr(self, name)
+            if val is None:
+                continue
+            if isinstance(val, str):
+                val = (val,)
+            try:
+                val = frozenset(val)
+            except TypeError:
+                raise ValueError(
+                    f"LineageFilter.{name} must be an iterable of strings "
+                    f"(got {getattr(self, name)!r})") from None
+            if not all(isinstance(x, str) for x in val):
+                raise ValueError(
+                    f"LineageFilter.{name} entries must be strings "
+                    f"(got {sorted(map(repr, val))})")
+            object.__setattr__(self, name, val)
+        for name in ("ssn_min", "ssn_max", "epoch_min", "epoch_max"):
+            val = getattr(self, name)
+            if val is not None and not isinstance(val, int):
+                raise ValueError(f"LineageFilter.{name} must be an int "
+                                 f"(got {val!r})")
+        if self.ssn_min is not None and self.ssn_max is not None \
+                and self.ssn_min > self.ssn_max:
+            raise ValueError(
+                f"LineageFilter ssn range is empty "
+                f"({self.ssn_min} > {self.ssn_max})")
+
+    def matches(self, op: str, port: Optional[str], ssn: int) -> bool:
+        """Exact (client-side) evaluation — epoch hints intentionally
+        excluded: they narrow scans, never membership."""
+        if self.ops is not None and op not in self.ops:
+            return False
+        if self.ports is not None and port not in self.ports:
+            return False
+        if self.ssn_min is not None and ssn < self.ssn_min:
+            return False
+        if self.ssn_max is not None and ssn > self.ssn_max:
+            return False
+        return True
 
 
 class TxnAborted(Exception):
@@ -266,6 +335,94 @@ class LogBackend(abc.ABC):
     @abc.abstractmethod
     def consumers_of(self, event_key) -> List[str]:
         """Receiver operator ids holding EVENT_LOG rows for an event."""
+
+    # ---- filtered lineage queries (predicate pushdown) -------------------
+    # Optional fast paths for the LineageQuery facade. The defaults delegate
+    # to the unfiltered ops above and filter client-side, so every backend
+    # answers correctly; backends that can evaluate a LineageFilter at the
+    # scan (SQL WHERE, secondary indexes, segment sidecar skipping) override
+    # these and advertise it via ``supports_query_pushdown``. Results may be
+    # a superset restricted by whatever the backend evaluated natively —
+    # LineageQuery re-applies the exact predicate, so pushdown only ever
+    # changes how much data the scan touches, never the answer.
+
+    #: True when the filtered query ops evaluate predicates at the scan
+    #: rather than via the client-side fallback below.
+    supports_query_pushdown: bool = False
+
+    def query_lineage_insets(self, event_key,
+                             flt: Optional[LineageFilter] = None
+                             ) -> List[str]:
+        """InSet_IDs that produced an output event (filtered variant of
+        ``lineage_insets_of``; the filter applies to the *output* key)."""
+        if flt is not None and not flt.matches(event_key[0], event_key[1],
+                                               event_key[2]):
+            return []
+        return self.lineage_insets_of(event_key)
+
+    def query_inset_events(self, rec_op: str, inset_id: str,
+                           flt: Optional[LineageFilter] = None
+                           ) -> List[Tuple]:
+        """Input event keys of one Input Set, filtered on the *sender* side
+        of each key (filtered ``lineage_events_of_inset``)."""
+        keys = self.lineage_events_of_inset(rec_op, inset_id)
+        if flt is None:
+            return keys
+        return [k for k in keys if flt.matches(k[0], k[1], k[2])]
+
+    def query_inset_outputs(self, send_op: str, inset_id: str,
+                            flt: Optional[LineageFilter] = None
+                            ) -> List[Tuple]:
+        """Output event keys produced from an Input Set (filtered
+        ``lineage_outputs_of_inset``)."""
+        keys = self.lineage_outputs_of_inset(send_op, inset_id)
+        if flt is None:
+            return keys
+        return [k for k in keys if flt.matches(k[0], k[1], k[2])]
+
+    def query_event_insets(self, event_key, rec_op: str,
+                           flt: Optional[LineageFilter] = None
+                           ) -> List[str]:
+        """InSet_IDs an input event joined at one receiver (filtered
+        ``insets_of_event``; the filter applies to the input key)."""
+        if flt is not None and not flt.matches(event_key[0], event_key[1],
+                                               event_key[2]):
+            return []
+        return self.insets_of_event(event_key, rec_op)
+
+    def query_consumers(self, event_key,
+                        flt: Optional[LineageFilter] = None) -> List[str]:
+        """Receiver ids holding rows for an event; ``flt.ops`` restricts the
+        receivers considered (filtered ``consumers_of``)."""
+        recs = self.consumers_of(event_key)
+        if flt is not None and flt.ops is not None:
+            recs = [r for r in recs if r in flt.ops]
+        return recs
+
+    def query_lineage(self, flt: Optional[LineageFilter] = None
+                      ) -> List[Tuple]:
+        """Bulk audit scan: all EVENT_LINEAGE rows matching ``flt`` as
+        ``(send_op, send_port, event_id, inset_id)`` tuples. Only backends
+        holding the lineage table natively implement this."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support bulk lineage scans")
+
+    def get_event_payload(self, event_key) -> Optional[Tuple[Dict, Any]]:
+        """EVENT_DATA payload for a key as ``(header, body)``, or None when
+        the payload was GC'd or never stored — the replay-from-lineage
+        materialization read. Backends without payload access return None."""
+        return None
+
+    # ---- query instrumentation ------------------------------------------
+    def query_stats(self) -> Dict[str, int]:
+        """Scan-effort counters for the lineage query paths (rows_scanned /
+        rows_returned, plus backend-specific keys such as segment skip
+        counts). Purely diagnostic — the pushdown benchmark and tests assert
+        on these; backends without instrumentation return {}."""
+        return {}
+
+    def reset_query_stats(self):
+        """Zero the ``query_stats`` counters."""
 
     # ---- GC (Sec. 3.6) ---------------------------------------------------
     @abc.abstractmethod

@@ -368,6 +368,39 @@ class GroupCommitStore(LogBackend):
     def consumers_of(self, event_key):
         return self.view.consumers_of(event_key)
 
+    # filtered lineage queries: the speculative view (a MemoryLogStore with
+    # native indexes) answers — committed-but-unflushed rows included
+    @property
+    def supports_query_pushdown(self):
+        return getattr(self.view, "supports_query_pushdown", False)
+
+    def query_lineage_insets(self, event_key, flt=None):
+        return self.view.query_lineage_insets(event_key, flt)
+
+    def query_inset_events(self, rec_op, inset_id, flt=None):
+        return self.view.query_inset_events(rec_op, inset_id, flt)
+
+    def query_inset_outputs(self, send_op, inset_id, flt=None):
+        return self.view.query_inset_outputs(send_op, inset_id, flt)
+
+    def query_event_insets(self, event_key, rec_op, flt=None):
+        return self.view.query_event_insets(event_key, rec_op, flt)
+
+    def query_consumers(self, event_key, flt=None):
+        return self.view.query_consumers(event_key, flt)
+
+    def query_lineage(self, flt=None):
+        return self.view.query_lineage(flt)
+
+    def get_event_payload(self, event_key):
+        return self.view.get_event_payload(event_key)
+
+    def query_stats(self):
+        return self.view.query_stats()
+
+    def reset_query_stats(self):
+        self.view.reset_query_stats()
+
     def gc(self, lineage_ops=(), keep_rows=None):
         self.view.gc(lineage_ops, keep_rows=keep_rows)
         if self.inner is not None:

@@ -46,11 +46,51 @@ import threading
 import zlib
 from typing import List, Optional, Tuple
 
-from repro.core.logstore.base import TxnAborted
+from repro.core.logstore.base import LineageFilter, TxnAborted
 from repro.core.logstore.memory import MemoryLogStore
 
 _FRAME = struct.Struct("<IIq")      # payload_len, crc32(payload), epoch|-1
 _INDEX = "index.json"
+
+
+def _read_frames(fpath: str):
+    """Yield (epoch|None, ops) per intact frame of one segment file; a
+    torn/corrupt tail frame (killed mid-append) ends the segment."""
+    try:
+        with open(fpath, "rb") as f:
+            data = f.read()
+    except FileNotFoundError:
+        return
+    if fpath.endswith(".logz"):
+        data = zlib.decompress(data)
+    off = 0
+    while off + _FRAME.size <= len(data):
+        ln, crc, ep = _FRAME.unpack_from(data, off)
+        start = off + _FRAME.size
+        if start + ln > len(data):
+            break
+        payload = data[start:start + ln]
+        if zlib.crc32(payload) != crc:
+            break
+        yield (None if ep < 0 else ep), pickle.loads(payload)
+        off = start + ln
+
+
+def _summarize_lineage(summ: dict, ops):
+    """Fold a record's put_lineage rows into a per-sender [min_eid, max_eid]
+    segment summary — the sidecar skip index of the lineage reader."""
+    for op in ops:
+        if op[0] != "put_lineage":
+            continue
+        eid, sop = op[1], op[2]
+        rng = summ.get(sop)
+        if rng is None:
+            summ[sop] = [eid, eid]
+        else:
+            if eid < rng[0]:
+                rng[0] = eid
+            if eid > rng[1]:
+                rng[1] = eid
 
 
 def _fsync_dir(path: str):
@@ -137,7 +177,9 @@ class SegmentLogStore(MemoryLogStore):
 
         self.replayed_records = 0
         dead_epochs = False
+        per_seg: dict = {}
         for name in self._segments:
+            summ = per_seg.setdefault(name, {})
             for epoch, ops in self._read_segment(name):
                 if epoch is not None and self.epoch_coord is not None \
                         and not self.epoch_coord.is_committed(epoch):
@@ -149,6 +191,7 @@ class SegmentLogStore(MemoryLogStore):
                 except TxnAborted:
                     continue
                 self._apply_ops(ops)
+                _summarize_lineage(summ, ops)
                 self.replayed_records += 1
         self.records_since_checkpoint = self.replayed_records
 
@@ -159,6 +202,13 @@ class SegmentLogStore(MemoryLogStore):
             active = self._next_name("seg", ".log")
             self._segments.append(active)
             fresh_index = True
+        # sidecar lineage summaries: frozen (non-active) segments carry a
+        # per-sender event-id range so a reader can skip them wholesale; the
+        # active segment keeps accumulating in _active_lin and is always
+        # scanned until rotation freezes it
+        self._lin_summary = {n: per_seg.get(n, {}) for n in self._segments
+                             if n != active}
+        self._active_lin = per_seg.get(active, {})
         self._fh = open(self._fpath(active), "ab")
         self._active_size = os.path.getsize(self._fpath(active))
         if fresh_index:
@@ -194,24 +244,7 @@ class SegmentLogStore(MemoryLogStore):
     def _read_segment(self, name: str):
         """Yield (epoch|None, ops) per intact frame; a torn/corrupt tail
         frame (killed mid-append) ends the segment."""
-        try:
-            with open(self._fpath(name), "rb") as f:
-                data = f.read()
-        except FileNotFoundError:
-            return
-        if name.endswith(".logz"):
-            data = zlib.decompress(data)
-        off = 0
-        while off + _FRAME.size <= len(data):
-            ln, crc, ep = _FRAME.unpack_from(data, off)
-            start = off + _FRAME.size
-            if start + ln > len(data):
-                break
-            payload = data[start:start + ln]
-            if zlib.crc32(payload) != crc:
-                break
-            yield (None if ep < 0 else ep), pickle.loads(payload)
-            off = start + ln
+        yield from _read_frames(self._fpath(name))
 
     def _clean_orphans(self):
         """Remove segment/checkpoint files the index no longer references —
@@ -233,7 +266,8 @@ class SegmentLogStore(MemoryLogStore):
     def _write_index(self):
         idx = {"format": 1, "filegen": self._filegen,
                "checkpoint": self._checkpoint_file,
-               "segments": self._segments}
+               "segments": self._segments,
+               "lineage_summary": self._lin_summary}
         tmp = self._fpath(_INDEX + ".tmp")
         with open(tmp, "w") as f:
             json.dump(idx, f)
@@ -249,6 +283,7 @@ class SegmentLogStore(MemoryLogStore):
                             -1 if epoch is None else epoch)
         self._fh.write(frame)
         self._fh.write(payload)
+        _summarize_lineage(self._active_lin, ops)
         self._active_size += _FRAME.size + len(payload)
         self.bytes_written += _FRAME.size + len(payload)
         self.records_since_checkpoint += 1
@@ -309,6 +344,10 @@ class SegmentLogStore(MemoryLogStore):
         self._segments.append(active)
         self._fh = open(self._fpath(active), "ab")
         self._active_size = 0
+        # freeze the sealed segment's lineage summary (an empty dict is
+        # meaningful: it proves the segment holds no lineage rows)
+        self._lin_summary[old] = self._active_lin
+        self._active_lin = {}
         self._hook("rotate:pre_index")
         self._write_index()                       # commit point of rotation
         self.rotations += 1
@@ -362,6 +401,8 @@ class SegmentLogStore(MemoryLogStore):
                 return
             os.replace(tmp, self._fpath(sealed))
             self._segments[self._segments.index(name)] = sealed
+            if name in self._lin_summary:
+                self._lin_summary[sealed] = self._lin_summary.pop(name)
             self._write_index()
             try:
                 os.remove(self._fpath(name))
@@ -433,6 +474,10 @@ class SegmentLogStore(MemoryLogStore):
                 old_files.append(self._checkpoint_file)
             self._checkpoint_file = ckpt
             self._segments = [active]
+            # truncated segments' lineage rows now live in the checkpoint
+            # image; the summaries die with the files they described
+            self._lin_summary = {}
+            self._active_lin = {}
             self._hook("compact:pre_swap")
             self._write_index()                   # the atomic swap
             self._hook("compact:post_swap")
@@ -493,3 +538,133 @@ class SegmentLogStore(MemoryLogStore):
                 self._sync()
                 self._fh.close()
         self._drain_seals()
+
+    def lineage_reader(self) -> "SegmentLineageReader":
+        """Offline lineage scanner over this store's directory (flushes
+        first so every committed row is on disk)."""
+        with self.lock:
+            self._sync()
+        return SegmentLineageReader(self.path)
+
+
+class SegmentLineageReader:
+    """Read-only lineage scanner over a SegmentLogStore directory — the
+    "audit the log without opening the store" path.
+
+    Answers the filtered lineage-row queries straight from the files: the
+    checkpoint image contributes its (already-compacted) lineage list, and
+    segments are visited only when their sidecar ``lineage_summary`` entry
+    (per-sender [min_eid, max_eid] ranges, frozen at rotation) can overlap
+    the filter — a segment with no entry (the active one) is always
+    scanned. Within a scanned segment, 2PC epoch tags are matched against
+    the filter's ``epoch_min``/``epoch_max`` hints frame by frame.
+
+    The reader sees the durable image only (unflushed commits are
+    invisible) and does not consult an epoch coordinator — on a store using
+    global flush epochs, quiesce or close the store before auditing.
+    ``stats`` exposes the skip/scan counters the pushdown benchmark
+    asserts on.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.stats = {"segments_scanned": 0, "segments_skipped": 0,
+                      "frames_scanned": 0, "rows_scanned": 0,
+                      "rows_returned": 0}
+
+    def _fpath(self, name: str) -> str:
+        return os.path.join(self.path, name)
+
+    def _load_index(self) -> dict:
+        with open(self._fpath(_INDEX), "r") as f:
+            return json.load(f)
+
+    @staticmethod
+    def _skip(summ: Optional[dict], flt: Optional[LineageFilter]) -> bool:
+        """True iff the summary proves no row in the segment matches."""
+        if summ is None:
+            return False            # no summary (active segment): must scan
+        if flt is None:
+            return not summ         # empty summary == provably no lineage
+        for sop, (lo, hi) in summ.items():
+            if flt.ops is not None and sop not in flt.ops:
+                continue
+            if flt.ssn_min is not None and hi < flt.ssn_min:
+                continue
+            if flt.ssn_max is not None and lo > flt.ssn_max:
+                continue
+            return False            # this sender's range may overlap
+        return True
+
+    def _iter_rows(self, flt: Optional[LineageFilter]):
+        """Yield every durable (send_op, send_port, event_id, inset) row a
+        matching query must consider; counts scan effort in ``stats``."""
+        idx = self._load_index()
+        summary = idx.get("lineage_summary", {})
+        if idx.get("checkpoint"):
+            with open(self._fpath(idx["checkpoint"]), "rb") as f:
+                blob = f.read()
+            if idx["checkpoint"].endswith("z"):
+                blob = zlib.decompress(blob)
+            for (eid, so, sp, ins) in pickle.loads(blob)["lineage"]:
+                self.stats["rows_scanned"] += 1
+                yield so, sp, eid, ins
+        for name in idx["segments"]:
+            if self._skip(summary.get(name), flt):
+                self.stats["segments_skipped"] += 1
+                continue
+            self.stats["segments_scanned"] += 1
+            for epoch, ops in _read_frames(self._fpath(name)):
+                if flt is not None and epoch is not None:
+                    if flt.epoch_min is not None and epoch < flt.epoch_min:
+                        continue
+                    if flt.epoch_max is not None and epoch > flt.epoch_max:
+                        continue
+                self.stats["frames_scanned"] += 1
+                for op in ops:
+                    if op[0] == "put_lineage":
+                        self.stats["rows_scanned"] += 1
+                        yield op[2], op[3], op[1], op[4]
+
+    def query_lineage(self, flt: Optional[LineageFilter] = None
+                      ) -> List[Tuple]:
+        out = sorted((so, sp, eid, ins)
+                     for (so, sp, eid, ins) in self._iter_rows(flt)
+                     if flt is None or flt.matches(so, sp, eid))
+        self.stats["rows_returned"] += len(out)
+        return out
+
+    def query_lineage_insets(self, event_key,
+                             flt: Optional[LineageFilter] = None
+                             ) -> List[str]:
+        so, sp, eid = tuple(event_key)
+        if flt is not None and not flt.matches(so, sp, eid):
+            return []
+        key_flt = LineageFilter(ops=frozenset([so]), ssn_min=eid,
+                                ssn_max=eid,
+                                epoch_min=None if flt is None
+                                else flt.epoch_min,
+                                epoch_max=None if flt is None
+                                else flt.epoch_max)
+        out = [ins for (so2, sp2, eid2, ins) in self._iter_rows(key_flt)
+               if (so2, sp2, eid2) == (so, sp, eid)]
+        self.stats["rows_returned"] += len(out)
+        return out
+
+    def query_inset_outputs(self, send_op: str, inset_id: str,
+                            flt: Optional[LineageFilter] = None
+                            ) -> List[Tuple]:
+        base = LineageFilter(ops=frozenset([send_op]))
+        out = sorted((so, sp, eid)
+                     for (so, sp, eid, ins) in self._iter_rows(base)
+                     if so == send_op and ins == inset_id
+                     and (flt is None or flt.matches(so, sp, eid)))
+        self.stats["rows_returned"] += len(out)
+        return out
+
+    def query_stats(self):
+        return dict(self.stats)
+
+    def reset_query_stats(self):
+        for k in self.stats:
+            self.stats[k] = 0

@@ -429,6 +429,63 @@ class ShardedLogStore(LogBackend):
     def insets_of_event(self, event_key, rec_op):
         return self._shard(rec_op).insets_of_event(event_key, rec_op)
 
+    # filtered lineage queries: same home-shard routing; the fan-out ones
+    # skip shards the filter's ``ops`` prove uninvolved (per-shard pushdown
+    # composes with shard pruning)
+    @property
+    def supports_query_pushdown(self):
+        return all(getattr(s, "supports_query_pushdown", False)
+                   for s in self.shards)
+
+    def query_lineage_insets(self, event_key, flt=None):
+        return self._shard(event_key[0]).query_lineage_insets(event_key, flt)
+
+    def query_inset_events(self, rec_op, inset_id, flt=None):
+        return self._shard(rec_op).query_inset_events(rec_op, inset_id, flt)
+
+    def query_inset_outputs(self, send_op, inset_id, flt=None):
+        return self._shard(send_op).query_inset_outputs(send_op, inset_id,
+                                                        flt)
+
+    def query_event_insets(self, event_key, rec_op, flt=None):
+        return self._shard(rec_op).query_event_insets(event_key, rec_op, flt)
+
+    def query_consumers(self, event_key, flt=None):
+        out = set()
+        for s in self.shards:
+            out.update(s.query_consumers(event_key, flt))
+        return sorted(out)
+
+    def query_lineage(self, flt=None):
+        if flt is not None and flt.ops is not None:
+            involved = sorted({self._idx(o) for o in flt.ops})
+        else:
+            involved = range(self.n_shards)
+        rows = []
+        for i in involved:
+            rows.extend(self.shards[i].query_lineage(flt))
+        return sorted(rows)
+
+    def get_event_payload(self, event_key):
+        # EVENT_DATA is receiver-homed and the receiver isn't in the key:
+        # probe shards until one holds the payload
+        for s in self.shards:
+            payload = s.get_event_payload(event_key)
+            if payload is not None:
+                return payload
+        return None
+
+    def query_stats(self):
+        out: Dict[str, int] = {}
+        for s in self.shards:
+            for k, v in s.query_stats().items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def reset_query_stats(self):
+        for s in self.shards:
+            s.reset_query_stats()
+
     # sender-side: rows live in the consumers' shards — merge
     def fetch_resend_events(self, op_id):
         rows = []

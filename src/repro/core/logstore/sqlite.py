@@ -24,7 +24,7 @@ import pickle
 import sqlite3
 from typing import List, Optional, Tuple
 
-from repro.core.logstore.base import TxnAborted
+from repro.core.logstore.base import LineageFilter, TxnAborted
 from repro.core.logstore.memory import MemoryLogStore
 
 
@@ -39,6 +39,18 @@ class SqliteLogStore(MemoryLogStore):
         self.conn.execute(
             "CREATE TABLE IF NOT EXISTS wal_ops (seq INTEGER PRIMARY KEY "
             "AUTOINCREMENT, blob BLOB, epoch INTEGER)")
+        # EVENT_LINEAGE mirror: put_lineage ops land here relationally (in
+        # the same SQLite txn as their WAL row) so the filtered query ops
+        # run as indexed SQL WHERE instead of scanning the log image.
+        self.conn.execute(
+            "CREATE TABLE IF NOT EXISTS lineage (eid INTEGER, sop TEXT, "
+            "sport TEXT, inset TEXT, epoch INTEGER)")
+        self.conn.execute(
+            "CREATE INDEX IF NOT EXISTS lineage_out ON lineage "
+            "(sop, sport, eid)")
+        self.conn.execute(
+            "CREATE INDEX IF NOT EXISTS lineage_inset ON lineage "
+            "(sop, inset)")
         self.conn.commit()
         self._rollback_uncommitted_epochs()
         self._replay_from_disk()
@@ -54,6 +66,8 @@ class SqliteLogStore(MemoryLogStore):
         if epochs:
             self.conn.executemany("DELETE FROM wal_ops WHERE epoch = ?",
                                   [(e,) for e in epochs])
+            self.conn.executemany("DELETE FROM lineage WHERE epoch = ?",
+                                  [(e,) for e in epochs])
             self.conn.commit()
 
     def _replay_from_disk(self):
@@ -67,11 +81,19 @@ class SqliteLogStore(MemoryLogStore):
             self._apply_ops(ops)
 
     def _persist(self, ops, epoch: Optional[int] = None):
-        """Apply one txn's ops and stage its WAL row; caller commits."""
+        """Apply one txn's ops and stage its WAL row; caller commits. The
+        lineage mirror is staged here (not in WAL replay) so reopening the
+        store never double-inserts rows."""
         blob = pickle.dumps(ops)
         self._apply_ops(ops)
         self.conn.execute("INSERT INTO wal_ops (blob, epoch) VALUES (?, ?)",
                           (blob, epoch))
+        lin = [(op[1], op[2], op[3], op[4], epoch) for op in ops
+               if op[0] == "put_lineage"]
+        if lin:
+            self.conn.executemany(
+                "INSERT INTO lineage (eid, sop, sport, inset, epoch) "
+                "VALUES (?, ?, ?, ?, ?)", lin)
         self.bytes_written += len(blob)
 
     def _commit(self, ops):
@@ -100,6 +122,61 @@ class SqliteLogStore(MemoryLogStore):
                 self._persist(ops, epoch=epoch)
             self.conn.commit()                    # durable point, once
         return None
+
+    # filtered lineage queries: SQL WHERE over the indexed mirror ---------
+    @staticmethod
+    def _flt_sql(flt: Optional[LineageFilter]) -> Tuple[str, list]:
+        """Translate a LineageFilter into SQL predicate fragments — the
+        predicate runs inside SQLite (index-driven), not over fetched rows."""
+        conds, params = [], []
+        if flt is None:
+            return "", params
+        if flt.ops is not None:
+            conds.append(f"sop IN ({','.join('?' * len(flt.ops))})")
+            params.extend(sorted(flt.ops))
+        if flt.ports is not None:
+            conds.append(f"sport IN ({','.join('?' * len(flt.ports))})")
+            params.extend(sorted(flt.ports))
+        if flt.ssn_min is not None:
+            conds.append("eid >= ?")
+            params.append(flt.ssn_min)
+        if flt.ssn_max is not None:
+            conds.append("eid <= ?")
+            params.append(flt.ssn_max)
+        return (" AND " + " AND ".join(conds)) if conds else "", params
+
+    def query_lineage_insets(self, event_key,
+                             flt: Optional[LineageFilter] = None
+                             ) -> List[str]:
+        so, sp, eid = tuple(event_key)
+        if flt is not None and not flt.matches(so, sp, eid):
+            return []
+        with self.lock:
+            rows = self.conn.execute(
+                "SELECT inset FROM lineage WHERE sop = ? AND sport = ? "
+                "AND eid = ?", (so, sp, eid)).fetchall()
+            return self._count(len(rows), [ins for (ins,) in rows])
+
+    def query_inset_outputs(self, send_op: str, inset_id: str,
+                            flt: Optional[LineageFilter] = None
+                            ) -> List[Tuple]:
+        extra, params = self._flt_sql(flt)
+        with self.lock:
+            rows = self.conn.execute(
+                "SELECT sop, sport, eid FROM lineage WHERE sop = ? "
+                "AND inset = ?" + extra, [send_op, inset_id] + params
+            ).fetchall()
+            return self._count(len(rows), sorted(tuple(r) for r in rows))
+
+    def query_lineage(self, flt: Optional[LineageFilter] = None
+                      ) -> List[Tuple]:
+        extra, params = self._flt_sql(flt)
+        where = ("WHERE " + extra[5:]) if extra else ""
+        with self.lock:
+            rows = self.conn.execute(
+                f"SELECT sop, sport, eid, inset FROM lineage {where}",
+                params).fetchall()
+            return self._count(len(rows), sorted(tuple(r) for r in rows))
 
     def crash(self):
         """Simulated process crash: the durable medium (the SQLite file)

@@ -317,6 +317,9 @@ def _worker_main(bootstrap: WorkerBootstrap, rpc_conn, tr_conn):
     while True:
         wt.pump(0)
         if wt.stopped:
+            # final snapshot — short-lived runs would otherwise stop inside
+            # the 0.05s throttle window with counters never reported
+            send_stats()
             return
 
         wt.begin_step()

@@ -128,9 +128,10 @@ def _prepare_replay(rt: OperatorRuntime):
     # restarted (or replay): also regenerate own unacked undone outputs
     for ev, status in store.fetch_resend_events(op.id):
         replay_out[(ev.send_port, ev.event_id)] = None
-    # map each output to its Input Set via EVENT_LINEAGE
+    # map each output to its Input Set via EVENT_LINEAGE (the filtered
+    # query op: indexed on backends with pushdown, same full scan otherwise)
     for (port, eid) in list(replay_out):
-        ins = store.lineage_insets_of((op.id, port, eid))
+        ins = store.query_lineage_insets((op.id, port, eid))
         if ins:
             replay_out[(port, eid)] = ins[0]
             insets.add(ins[0])

@@ -158,6 +158,10 @@ def test_api_surface_snapshot():
     # intentional API change: update the docs and this snapshot together.
     assert sorted(repro.core.__all__) == [
         "Engine",
+        "EventKey",
+        "LineageFilter",
+        "LineageQuery",
+        "LineageScope",
         "LocalCluster",
         "LogioAPI",
         "Pipeline",
@@ -183,3 +187,30 @@ def test_channels_shim_warns():
     # the shim still re-exports the moved names
     from repro.core.transport.local import Channel
     assert ch.Channel is Channel
+
+
+def test_lineage_free_functions_shim_warns():
+    """The free-function query surface moved to LineageQuery; the shims
+    must warn on CALL (not import) and still return the old tuple lists."""
+    from repro.core import Event, LineageQuery, backward, forward
+    from repro.core.events import UNDONE
+    from repro.core.logstore import MemoryLogStore
+
+    store = MemoryLogStore()
+    txn = store.begin()
+    txn.log_event(Event(0, "a", "out", "b", "in"), UNDONE)
+    txn.commit()
+    txn = store.begin()
+    txn.assign_insets(("a", "out", 0), ["i0"], rec_op="b")
+    txn.put_lineage(0, "b", "out", "i0")
+    txn.commit()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old_bw = backward(store, ("b", "out", 0))
+        old_fw = forward(store, ("a", "out", 0), "b")
+    assert len([w for w in caught
+                if issubclass(w.category, DeprecationWarning)]) == 2
+    assert all("LineageQuery" in str(w.message) for w in caught)
+    # the shims delegate: identical answers to the typed facade
+    assert old_bw == LineageQuery(store).backward(("b", "out", 0)).keys()
+    assert old_fw == LineageQuery(store).forward(("a", "out", 0), "b").keys()

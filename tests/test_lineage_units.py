@@ -3,9 +3,11 @@
 and terminal-operator targets (the case the connection graph alone cannot
 see — the walk must still find the scope's final output port)."""
 
-from repro.core import (Engine, GeneratorSource, LineageScope, MapOperator,
-                        Pipeline, ReadSource, SyncJoinOperator, TerminalSink,
-                        backward, enabled_ports, forward)
+import time
+
+from repro.core import (Engine, GeneratorSource, LineageQuery, LineageScope,
+                        MapOperator, Pipeline, ReadSource, SyncJoinOperator,
+                        TerminalSink, enabled_ports)
 from repro.core.lineage import _paths
 from tests.helpers import diamond_pipeline
 
@@ -82,6 +84,40 @@ def test_paths_cycle_terminates_without_duplicates():
     assert len({tuple(p) for p in paths}) == 1
 
 
+def _wide_diamond_chain(width: int, length: int):
+    """``length`` cascaded diamonds, each ``width`` parallel one-op
+    branches — ``width ** length`` distinct paths."""
+    conns = []
+    prev = ("src", "out")
+    for i in range(length):
+        for w in range(width):
+            b = f"d{i}b{w}"
+            conns.append((prev[0], prev[1], b, "in"))
+            conns.append((b, "out", f"j{i}", f"in{w}"))
+        prev = (f"j{i}", "out")
+    return _graph(conns), prev
+
+
+def test_paths_wide_diamond_cascade_scales():
+    """Regression for the per-candidate edge-membership check in the path
+    walk: it rebuilt the path's consecutive-pair list for every candidate
+    step (O(path length) allocations per check) instead of carrying a set.
+    A cascade of wide diamonds — long paths, hundreds of thousands of
+    membership checks — must enumerate fast and exactly."""
+    g, target = _wide_diamond_chain(width=5, length=6)
+    t0 = time.time()
+    paths = _paths(g, ("src", "out"), target)
+    elapsed = time.time() - t0
+    assert len(paths) == 5 ** 6
+    assert len({tuple(p) for p in paths}) == 5 ** 6
+    assert elapsed < 20.0, f"path walk took {elapsed:.1f}s"
+    # capture derivation over the same cascade stays exact
+    ports = enabled_ports(
+        g, [LineageScope(("src", "out"), target)])
+    assert ports["d0b0"] == ({"in"}, {"out"})
+    assert ports["j5"] == ({f"in{w}" for w in range(5)}, {"out"})
+
+
 def test_enabled_ports_diamond_covers_both_branches():
     ports = enabled_ports(
         DIAMOND, [LineageScope(("src", "out"), ("join", "out"))])
@@ -125,13 +161,14 @@ def test_diamond_lineage_queries_end_to_end():
     eng.start()
     assert eng.run_to_completion()
     eng.stop()
+    q = LineageQuery(eng.store)
     # backward from the first join output: contributors from BOTH branches
-    contributors = backward(eng.store, ("join", "out", 0))
-    ops = {c[0] for c in contributors}
+    contributors = q.backward(("join", "out", 0))
+    ops = {c[0] for c in contributors.keys()}
     assert {"fast", "slow", "src"} <= ops
     # forward from the first source event reaches a join output
-    fwd = forward(eng.store, ("src", "out", 0), "fast")
-    assert any(k[0] == "join" for k in fwd)
+    fwd = q.forward(("src", "out", 0), "fast")
+    assert any(k.op == "join" for k in fwd)
 
 
 def test_multi_scope_diamond_engine_capture():

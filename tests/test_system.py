@@ -1,7 +1,6 @@
 """End-to-end behaviour tests for the LOG.io system (step + thread modes)."""
 
-from repro.core import (Engine, FailureInjector, LineageScope, backward,
-                        forward)
+from repro.core import Engine, FailureInjector, LineageQuery, LineageScope
 from tests.helpers import diamond_pipeline, linear_pipeline, sink_outputs
 
 
@@ -65,10 +64,11 @@ def test_lineage_backward_forward():
     scopes = [LineageScope(("src", "out"), ("win", "out"))]
     eng = Engine(build(), mode="step", lineage_scopes=scopes)
     assert eng.run_to_completion()
-    back = backward(eng.store, ("win", "out", 0))
+    q = LineageQuery(eng.store)
+    back = q.backward(("win", "out", 0)).keys()
     assert ("src", "out", 0) in back and ("src", "out", 3) in back
     assert ("src", "out", 4) not in back     # no false contributors
-    fwd = forward(eng.store, ("src", "out", 2), "map")
+    fwd = q.forward(("src", "out", 2), "map").keys()
     assert ("win", "out", 0) in fwd
     assert ("win", "out", 1) not in fwd
 
@@ -80,9 +80,10 @@ def test_lineage_correct_under_failure():
     eng = Engine(build(), mode="step", lineage_scopes=scopes, injector=inj)
     assert eng.run_to_completion()
     assert sink_outputs(eng) == expected
+    q = LineageQuery(eng.store)
     for i in range(5):
-        back = backward(eng.store, ("win", "out", i))
-        srcs = sorted(k[2] for k in back if k[0] == "src")
+        back = q.backward(("win", "out", i))
+        srcs = sorted(k.ssn for k in back if k.op == "src")
         assert srcs == list(range(i * 4, (i + 1) * 4))
 
 
