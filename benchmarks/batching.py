@@ -1,0 +1,185 @@
+"""High-rate head-to-head: per-event LOG.io vs adaptive micro-batching
+vs ABS (Sec. 9's high-throughput regime).
+
+The paper identifies per-event pessimistic logging as LOG.io's overhead
+at high rates, where epoch-based ABS amortizes its cost over whole
+epochs.  The adaptive micro-batched hot path closes that gap the same
+way without giving up per-event recovery: runs of queued events go
+through one vectored log transaction, one coalesced ack emission and one
+batched dispatch, while the governor degenerates to batch=1 at moderate
+rates so latency and straggler behavior are unchanged.
+
+Cells (saturation, rate=0):
+  * ``logio-scalar``   — the per-event path (batching off), the baseline
+                         the >=3x acceptance target is measured against;
+  * ``logio-adaptive`` — the governed batched path;
+  * ``abs``            — the ABS protocol at its default epoch size.
+
+Cells (moderate, the paper's 1 event / 100 ms regime, TIME_SCALE'd):
+  * per-event vs adaptive wall time — the governor must degenerate to
+    scalar behavior, so the two must match within noise.
+
+Run:  PYTHONPATH=src:. python benchmarks/batching.py [--json FILE]
+CSV:  name,us_per_call,derived   (derived = events/sec for *throughput*)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+from functools import partial
+
+from benchmarks.common import TIME_SCALE
+from repro.core import (CountWindowOperator, Engine, GeneratorSource,
+                        MapOperator, Pipeline, ReadSource, TerminalSink)
+from repro.core.logstore import build_store
+
+
+def _mk_store(spec: str):
+    kw = dict(shards=4, batch_size=32, interval=0.002)
+    if spec.startswith(("sqlite", "segment")):
+        d = tempfile.mkdtemp(prefix="logio-bench-batching-")
+        kw["path"] = os.path.join(d, "log.db")
+    return build_store(spec, **kw)
+
+#: the paper's moderate regime: 1 event / 100 ms, divided by TIME_SCALE
+MODERATE_RATE = 0.1 / TIME_SCALE
+
+WINDOW = 4
+
+
+def _double(b):
+    return {"v": b["v"] * 2}
+
+
+def _wsum(bs):
+    return {"s": sum(b["v"] for b in bs)}
+
+
+def _build(n_events: int, rate: float = 0.0):
+    def build():
+        p = Pipeline()
+        p.add(partial(GeneratorSource, "src",
+                      ReadSource([{"v": i} for i in range(n_events)]),
+                      rate=rate))
+        p.add(partial(MapOperator, "map", fn=_double))
+        p.add(partial(CountWindowOperator, "win", WINDOW, agg=_wsum))
+        p.add(partial(TerminalSink, "sink", target=n_events // WINDOW))
+        p.connect("src", "out", "map", "in")
+        p.connect("map", "out", "win", "in")
+        p.connect("win", "out", "sink", "in")
+        return p
+    return build
+
+
+def _run_once(n_events: int, *, batching="off", protocol: str = "logio",
+              store_spec: str = "memory", rate: float = 0.0,
+              timeout: float = 240.0) -> float:
+    build = _build(n_events, rate=rate)
+    kwargs = dict(store=_mk_store(store_spec), mode="thread",
+                  batching=batching)
+    if protocol == "abs":
+        kwargs["protocol"] = "abs"
+        kwargs["abs_options"] = {"epoch_events": 15}
+    eng = Engine(build(), **kwargs)
+    t0 = time.time()
+    eng.start()
+    ok = eng.wait(timeout)
+    dt = time.time() - t0
+    eng.stop()
+    if not ok:
+        raise TimeoutError(f"batching bench cell did not finish "
+                           f"({protocol}/{batching}/{store_spec})")
+    return dt
+
+
+def _best(repeats: int, fn) -> float:
+    return min(fn() for _ in range(repeats))
+
+
+def sweep(rows: list, n_events: int = 2000, repeats: int = 2,
+          moderate_events: int = 200):
+    # ---- saturation: events/sec per (protocol x batching) ----------------
+    # The >=3x acceptance target is measured on the durable per-event
+    # stores (sqlite, segment): there every scalar commit pays an fsync,
+    # which is exactly the per-event overhead the paper concedes to ABS.
+    # memory and the group-commit stacks already amortize that cost, so
+    # their (still real) gains are reported without the target verdict.
+    stores = ["memory", "sqlite", "segment", "sqlite+group", "segment+group"]
+    target_stores = {"sqlite", "segment"}
+    for spec in stores:
+        cells = [
+            ("logio-scalar", dict(batching="off")),
+            ("logio-adaptive", dict(batching="adaptive")),
+            ("abs", dict(batching="off", protocol="abs")),
+        ]
+        eps_by = {}
+        for cell, kw in cells:
+            dt = _best(repeats,
+                       lambda kw=kw: _run_once(n_events, store_spec=spec,
+                                               **kw))
+            eps = n_events / dt
+            eps_by[cell] = eps
+            row = (f"batching/{spec}/{cell}/throughput", dt * 1e6 / n_events,
+                   round(eps, 1))
+            rows.append(row)
+            print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+        gain = eps_by["logio-adaptive"] / eps_by["logio-scalar"]
+        vs_abs = eps_by["logio-adaptive"] / eps_by["abs"]
+        if spec in target_stores:
+            verdict = "OK (>=3x)" if gain >= 3.0 else "BELOW TARGET"
+        else:
+            verdict = "(amortizing store; no 3x target)"
+        print(f"# {spec}: adaptive vs per-event {gain:.2f}x -> {verdict}; "
+              f"vs abs {vs_abs:.2f}x", flush=True)
+        rows.append((f"batching/{spec}/gain_vs_scalar", 0.0, round(gain, 2)))
+
+    # ---- moderate rate: the governor must degenerate to scalar -----------
+    for cell, kw in (("moderate-scalar", dict(batching="off")),
+                     ("moderate-adaptive", dict(batching="adaptive"))):
+        dt = _best(repeats,
+                   lambda kw=kw: _run_once(moderate_events, rate=MODERATE_RATE,
+                                           **kw))
+        lat_us = dt * 1e6 / moderate_events
+        row = (f"batching/{cell}", lat_us, round(moderate_events / dt, 1))
+        rows.append(row)
+        print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+    sc = next(r for r in rows if r[0] == "batching/moderate-scalar")
+    ad = next(r for r in rows if r[0] == "batching/moderate-adaptive")
+    drift = (ad[1] - sc[1]) / sc[1] * 100.0
+    print(f"# moderate-rate latency drift adaptive vs scalar: "
+          f"{drift:+.1f}% (target: within noise)", flush=True)
+    return rows
+
+
+def run(rows, repeats: int = 1, full: bool = False, quick: bool = False):
+    """``benchmarks.run`` section adapter."""
+    n = 5000 if full else (500 if quick else 2000)
+    sweep(rows, n_events=n, repeats=max(repeats, 1),
+          moderate_events=100 if quick else 200)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=2000)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write rows as JSON (BENCH_batching.json)")
+    args = ap.parse_args()
+    if args.quick:
+        args.events, args.repeats = min(args.events, 500), 1
+    rows: list = []
+    print("name,us_per_call,derived")
+    sweep(rows, n_events=args.events, repeats=args.repeats)
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": round(u, 2), "derived": d}
+                       for n, u, d in rows], f, indent=2)
+        print(f"# wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,10 @@ is run once to capture the exact per-operator transaction trace (the five
 ops' State-Update + Output-Set transactions), then the trace is replayed
 full-speed by one thread per operator against each backend stack —
 isolating events/sec of the log path from engine scheduling and sleeps.
+Each config replays a second, micro-batched trace (``@batched`` rows:
+vectored ``log_events``/``set_status_many`` ops captured with
+``Engine(batching="adaptive")``) — the workload the sharded backend's
+one-lock-per-run routing is built for.
 
 Run:  PYTHONPATH=src:. python benchmarks/logstore_throughput.py
 CSV:  config,events_per_sec,txns,speedup_vs_memory_plain
@@ -44,11 +48,15 @@ class TraceStore(MemoryLogStore):
         return token
 
 
-def capture_trace(n_events: int, kb: float):
+def capture_trace(n_events: int, kb: float, batching="off"):
+    """Committed-txn trace of one UC1 run.  ``batching="adaptive"`` captures
+    the micro-batched hot path instead: vectored ``log_events`` /
+    ``set_status_many`` ops in far fewer transactions, which is what
+    exercises the sharded backend's one-lock-per-run routing."""
     build = build_uc1(n_events=n_events, rate_s=0.0, op2_pt=0.0, op3_pt=0.0,
                       op3_window=2, op4_window=10, kb=kb)
     store = TraceStore()
-    eng = Engine(build(), store=store, mode="thread")
+    eng = Engine(build(), store=store, mode="thread", batching=batching)
     eng.start()
     ok = eng.wait(timeout=120.0)
     eng.stop()
@@ -89,6 +97,10 @@ def sweep(n_events: int = 1000, kb: float = 64.0, shards: int = 4,
     trace = capture_trace(n_events, kb)
     n_txns = sum(len(v) for v in trace.values())
     print(f"# captured {n_txns} txns from {len(trace)} operators", flush=True)
+    btrace = capture_trace(n_events, kb, batching="adaptive")
+    n_btxns = sum(len(v) for v in btrace.values())
+    print(f"# captured {n_btxns} batched txns from {len(btrace)} operators",
+          flush=True)
 
     tmp = tempfile.mkdtemp(prefix="logstore_bench_")
     configs = [("memory/plain", lambda: build_store("memory"))]
@@ -131,28 +143,51 @@ def sweep(n_events: int = 1000, kb: float = 64.0, shards: int = 4,
              lambda: sg("segment+sharded+group")),
         ]
 
-    base_eps = None
+    base_eps = {"": None, "@batched": None}
     results = []
     for name, mk in configs:
-        best = None
-        for _ in range(repeats):
-            store = mk()
-            dt = replay(trace, store)
-            store.close()
-            best = dt if best is None else min(best, dt)
-        eps = n_events / best
-        if name == "memory/plain":
-            base_eps = eps
-        speedup = eps / base_eps if base_eps else float("nan")
-        results.append((name, eps, speedup))
-        print(f"{name},{eps:.0f},{n_txns},{speedup:.2f}x", flush=True)
+        # each config replays the per-event trace AND the micro-batched one
+        # (vectored log_events/set_status_many in far fewer txns); speedups
+        # are within-trace, vs the matching memory/plain baseline
+        for suffix, tr, nt in (("", trace, n_txns),
+                               ("@batched", btrace, n_btxns)):
+            best = None
+            for _ in range(repeats):
+                store = mk()
+                dt = replay(tr, store)
+                store.close()
+                best = dt if best is None else min(best, dt)
+            eps = n_events / best
+            if name == "memory/plain":
+                base_eps[suffix] = eps
+            base = base_eps[suffix]
+            speedup = eps / base if base else float("nan")
+            results.append((name + suffix, eps, speedup))
+            print(f"{name}{suffix},{eps:.0f},{nt},{speedup:.2f}x", flush=True)
 
-    tgt = [r for r in results if r[0].startswith("memory/sharded+group")]
-    if tgt and base_eps:
+    by_name = {r[0]: r for r in results}
+    tgt = [r for r in results
+           if r[0].startswith("memory/sharded+group") and "@" not in r[0]]
+    if tgt and base_eps[""]:
         best = max(r[2] for r in tgt)
         verdict = "OK (>=2x)" if best >= 2.0 else "BELOW TARGET"
         print(f"# sharded+group vs memory/plain: {best:.2f}x -> {verdict}",
               flush=True)
+    sh = by_name.get("memory/sharded")
+    shb = by_name.get("memory/sharded@batched")
+    if sh is not None and shb is not None:
+        # the sharded regression fix: pre-fix, per-op routing + the
+        # all-shard commit barrier held memory/sharded at 0.45x of
+        # plain on this trace.  Single-shard txns now take exactly one
+        # shard lock (vectored runs: one lock per shard per run), which
+        # must put sharded within routing overhead of plain — the
+        # remaining gap is the per-txn home-shard dispatch, which an
+        # uncontended single-process replay cannot win back.
+        worst = min(sh[2], shb[2])
+        verdict = "OK (>=0.75x, was 0.45x)" if worst >= 0.75 \
+            else "BELOW TARGET"
+        print(f"# memory/sharded vs plain: {sh[2]:.2f}x scalar, "
+              f"{shb[2]:.2f}x batched -> {verdict}", flush=True)
     by_name = {r[0]: r[1] for r in results}
     sq_g, sg_g = by_name.get("sqlite/group(b=32)"), \
         by_name.get("segment/group(b=32)")

@@ -10,8 +10,8 @@ noisy shared runner.
 Metrics compared (higher is better):
   * rows named ``*throughput*`` in the name/us_per_call/derived files
     (BENCH_pipeline.json, BENCH_process.json, BENCH_transport.json,
-    BENCH_lineage.json) — ``derived`` is the events/sec (or queries/sec)
-    figure;
+    BENCH_lineage.json, BENCH_batching.json) — ``derived`` is the
+    events/sec (or queries/sec) figure;
   * ``events_per_sec`` per config in BENCH_logstore.json.
 
 Usage:
@@ -32,7 +32,7 @@ from typing import Dict, Optional
 
 BENCH_FILES = ("BENCH_pipeline.json", "BENCH_process.json",
                "BENCH_transport.json", "BENCH_logstore.json",
-               "BENCH_lineage.json")
+               "BENCH_lineage.json", "BENCH_batching.json")
 
 
 def _find(root: Path, fname: str) -> Optional[Path]:

@@ -29,7 +29,7 @@ def main():
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--only", default=None,
                     help="comma list: uc1,uc2,uc3,lineage,lineage_query,"
-                         "logstore,process,roofline")
+                         "logstore,batching,process,roofline")
     ap.add_argument("--json", default=None,
                     help="also write the collected rows as JSON "
                          "(per-commit perf-trajectory artifact)")
@@ -37,7 +37,7 @@ def main():
     repeats = args.repeats or (3 if args.full else (1 if args.quick else 2))
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (lineage_overhead, lineage_query,
+    from benchmarks import (batching, lineage_overhead, lineage_query,
                             logstore_throughput, process_mode, roofline,
                             uc1, uc2, uc3)
     rows = []
@@ -46,6 +46,7 @@ def main():
                       ("lineage", lineage_overhead),
                       ("lineage_query", lineage_query),
                       ("logstore", logstore_throughput),
+                      ("batching", batching),
                       ("process", process_mode), ("roofline", roofline)):
         if only and name not in only:
             continue

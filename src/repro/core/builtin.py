@@ -114,6 +114,35 @@ class GeneratorSource(Operator):
         self._emit("out", body, last=(off + 1 >= len(self._effect)))
         return True
 
+    def pending_emits(self) -> int:
+        """How much unemitted input the governor may batch over.  Rate-
+        limited sources report 1 (each emission waits out its interval, so
+        batching would distort the arrival process)."""
+        if self._effect is None or self.rate > 0:
+            return 1
+        return max(0, len(self._effect) - self.runtime.ctx.read_offset)
+
+    def step_run(self, max_n: int) -> int:
+        """Emit up to ``max_n`` output events through ONE log transaction
+        (one vectored ``log_events`` + one trailing state snapshot).
+        Returns the number of bodies emitted (0 when exhausted).  A crash
+        before the commit loses at most this run — the offset travels in
+        the same transaction, so recovery regenerates exactly the
+        uncommitted suffix."""
+        rt = self.runtime
+        if self._effect is None:
+            self.start_read()
+        off = rt.ctx.read_offset
+        n = min(max_n, len(self._effect) - off)
+        if n <= 1 or self.rate > 0:
+            return 1 if self.step() else 0
+        bodies = self._effect[off:off + n]
+        rt.ctx.read_offset = off + n
+        for _ in bodies:
+            rt.crash_point(self.id, "source_pre_log")
+        self._emit_run("out", bodies, last=(off + n >= len(self._effect)))
+        return n
+
     def _emit(self, port: str, body, last: bool):
         rt = self.runtime
         ssn = rt.next_ssn(port)
@@ -129,6 +158,32 @@ class GeneratorSource(Operator):
             txn.set_status((self.id, self.conn_id, 0), DONE)
         txn.commit()
         rt.crash_point(self.id, "source_post_log")
+        for e in evs:
+            rt._send(e)
+        rt.stats["events_out"] += len(evs)
+
+    def _emit_run(self, port: str, bodies: List[Any], last: bool):
+        rt = self.runtime
+        chans = self.out_channels.get(port, [])
+        evs: List[Event] = []
+        for body in bodies:
+            ssn = rt.next_ssn(port)
+            evs.extend(Event(ssn, self.id, port, ch.rec_op, ch.rec_port,
+                             body=body) for ch in chans)
+        txn = rt.store.begin()
+        if len(evs) == 1:
+            txn.log_event(evs[0], UNDONE)
+        elif evs:
+            txn.log_events([(e, UNDONE, None) for e in evs])
+        for e in evs:
+            txn.put_event_data(e)
+        txn.put_state(self.id, rt.new_state_id(), rt._state_blob(),
+                      keep_history=rt.keep_state_history)
+        if last and not self.source.replayable:
+            txn.set_status((self.id, self.conn_id, 0), DONE)
+        txn.commit()
+        for _ in bodies:
+            rt.crash_point(self.id, "source_post_log")
         for e in evs:
             rt._send(e)
         rt.stats["events_out"] += len(evs)

@@ -32,6 +32,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.batching import make_governor, resolve_batching
 from repro.core.builtin import GeneratorSource
 from repro.core.transport import Channel
 from repro.core.transport.base import (Placement, WorkerBootstrap,
@@ -164,6 +165,7 @@ class Engine:
                  restart_delay: float = 0.05,
                  replay_ops: Sequence[str] = (),
                  abs_options: Optional[dict] = None,
+                 batching: Optional[Any] = None,
                  resume: bool = False):
         """``store`` is any :class:`LogBackend`, a typed
         :class:`~repro.core.logstore.StoreConfig`, or a ``build_store``
@@ -253,6 +255,11 @@ class Engine:
         self.restart_delay = restart_delay
         self.replay_ops = set(replay_ops)
         self.abs_options = abs_options or {}
+        # micro-batch governor spec: "off" (default), "adaptive", or a
+        # fixed int run length; None consults LOGIO_BATCH. Resolved once
+        # here so process-mode workers inherit the supervisor's decision
+        # through the bootstrap payload. See docs/batching.md.
+        self.batching = resolve_batching(batching)
 
         self._stop = threading.Event()
         self._done = threading.Event()
@@ -313,6 +320,7 @@ class Engine:
                 replay_mode=op_id in self.replay_ops,
                 keep_state_history=bool(lin_out),
             )
+            self.runtimes[op_id].governor = make_governor(self.batching)
         for g in set(self.pipeline.groups.values()):
             if only_group and g != only_group:
                 continue
@@ -359,6 +367,7 @@ class Engine:
                            for o in self.group_ops(group)
                            if o in self._lineage_ports},
             replay_ops=frozenset(self.replay_ops),
+            batching=self.batching,
         )
 
     # ------------------------------------------------------------------
@@ -440,12 +449,33 @@ class Engine:
     def _step_op(self, op: Operator) -> bool:
         rt = self.runtimes[op.id]
         if isinstance(op, GeneratorSource):
+            gov = rt.governor
+            if gov is not None:
+                n = gov.limit(op.pending_emits())
+                if n > 1:
+                    t0 = time.monotonic()
+                    k = op.step_run(n)
+                    gov.observe(k, time.monotonic() - t0)
+                    return k > 0
             return op.step()
         progressed = False
+        gov = rt.governor
         for port in op.input_ports:
             ch = op.in_channels.get(port)
             if ch is None:
                 continue
+            if gov is not None:
+                # drain a governed run of already-queued events through one
+                # vectored pass; an idle channel degenerates to runs of one
+                n = gov.limit(ch.unprocessed())
+                if n > 1:
+                    evs = ch.peek_run(n)
+                    if evs:
+                        t0 = time.monotonic()
+                        k = rt.handle_inputs(port, evs)
+                        gov.observe(k, time.monotonic() - t0)
+                        progressed = progressed or k > 0
+                    continue
             ev = ch.peek()
             if ev is not None:
                 rt.handle_input(port, ev)
@@ -516,6 +546,15 @@ class Engine:
         if self._proc is not None:
             return self._proc.op_stats()
         return {op_id: rt.stats["events_in"] + rt.stats["events_out"]
+                for op_id, rt in self.runtimes.items()}
+
+    def op_stats_detail(self) -> Dict[str, Dict[str, int]]:
+        """Full per-operator runtime counter dicts (txns, batched_runs,
+        recovery_scan_batches, ...; process mode: summed across worker
+        incarnations by the supervisor)."""
+        if self._proc is not None:
+            return self._proc.op_stats_detail()
+        return {op_id: dict(rt.stats)
                 for op_id, rt in self.runtimes.items()}
 
     def wire_stats(self) -> Dict[str, float]:

@@ -121,6 +121,20 @@ class LogTransaction:
             ev = dataclasses.replace(ev, body=None, header=dict(ev.header))
         self.ops.append(("log_event", ev, status, inset_id))
 
+    def log_events(self, entries: Iterable[Tuple]):
+        """Vectored ``log_event``: one op carrying a *run* of events. Each
+        entry is ``(event, status, inset_id)`` and every row stays
+        individually keyed in EVENT_LOG — a crash mid-run replays exactly
+        the unlogged suffix, never a whole batch. Backends apply the run
+        under one lock acquisition / one durable append."""
+        recs = []
+        for ev, status, inset_id in entries:
+            if ev.cached_blob() is not None:
+                ev = dataclasses.replace(ev, body=None,
+                                         header=dict(ev.header))
+            recs.append((ev, status, inset_id))
+        self.ops.append(("log_events", recs))
+
     def put_event_data(self, ev: Event):
         blob = ev.cached_blob()
         if blob is not None:
@@ -142,6 +156,14 @@ class LogTransaction:
         receiver's rows; only_status makes the flip conditional."""
         self.ops.append(("set_status", key, status, inset_id, rec_op,
                          only_status))
+
+    def set_status_many(self, entries: Iterable[Tuple]):
+        """Vectored ``set_status``: one op flipping a run of individually
+        keyed rows. Each entry is ``(key, status, inset_id, rec_op,
+        only_status)`` — the same fields ``set_status`` takes."""
+        self.ops.append(("set_status_many",
+                         [(tuple(k), s, i, r, o)
+                          for (k, s, i, r, o) in entries]))
 
     def assign_insets(self, key, inset_ids: List[str],
                       rec_op: Optional[str] = None):

@@ -177,13 +177,33 @@ class MemoryLogStore(LogBackend):
             return blob[1], blob[2]
         return pickle.loads(blob)
 
+    def _log_event_row(self, ev: Event, status: str,
+                       inset_id: Optional[str]):
+        key = (ev.send_op, ev.send_port, ev.event_id, ev.rec_op, inset_id)
+        self._add_row(key, {"status": status, "rec_op": ev.rec_op,
+                            "rec_port": ev.rec_port, "inset": inset_id})
+
+    def _set_status_rows(self, key, status, inset_id, rec_op, only_status):
+        for k in list(self._by_key3.get(key, ())):
+            if inset_id != "*" and k[4] != inset_id:
+                continue
+            if rec_op is not None and k[3] != rec_op:
+                continue
+            if only_status is not None and \
+                    self.event_log[k]["status"] != only_status:
+                continue
+            self.event_log[k]["status"] = status
+
     def _apply_one(self, op):
         kind = op[0]
         if kind == "log_event":
             _, ev, status, inset_id = op
-            key = (ev.send_op, ev.send_port, ev.event_id, ev.rec_op, inset_id)
-            self._add_row(key, {"status": status, "rec_op": ev.rec_op,
-                                "rec_port": ev.rec_port, "inset": inset_id})
+            self._log_event_row(ev, status, inset_id)
+        elif kind == "log_events":
+            # vectored run: rows stay individually keyed — only the op
+            # framing (lock/WAL/frame/fsync amortization) is batched
+            for ev, status, inset_id in op[1]:
+                self._log_event_row(ev, status, inset_id)
         elif kind == "put_event_data":
             _, ev = op
             self.event_data[ev.key()] = self._make_blob(ev)
@@ -200,15 +220,11 @@ class MemoryLogStore(LogBackend):
             self.event_data.pop(op[1], None)
         elif kind == "set_status":
             _, key, status, inset_id, rec_op, only_status = op
-            for k in list(self._by_key3.get(key, ())):
-                if inset_id != "*" and k[4] != inset_id:
-                    continue
-                if rec_op is not None and k[3] != rec_op:
-                    continue
-                if only_status is not None and \
-                        self.event_log[k]["status"] != only_status:
-                    continue
-                self.event_log[k]["status"] = status
+            self._set_status_rows(key, status, inset_id, rec_op, only_status)
+        elif kind == "set_status_many":
+            for key, status, inset_id, rec_op, only_status in op[1]:
+                self._set_status_rows(key, status, inset_id, rec_op,
+                                      only_status)
         elif kind == "assign_insets":
             _, key, insets, rec = op
             base = key + (rec, None)

@@ -99,6 +99,18 @@ class ShardedLogStore(LogBackend):
     def _shard(self, op_id) -> LogBackend:
         return self.shards[self._idx(op_id)]
 
+    def _log_entry_home(self, entry) -> int:
+        ev = entry[0]
+        return self._idx(ev.rec_op if ev.rec_op is not None else ev.send_op)
+
+    def _status_entry_home(self, entry) -> Optional[int]:
+        key, _status, _inset, rec_op, _only = entry
+        if rec_op is not None:
+            return self._idx(rec_op)
+        if key[1] is None:            # write action: receiver == sender
+            return self._idx(key[0])
+        return BROADCAST
+
     def _route(self, op) -> Optional[List[int]]:
         """Home shard indices for one op tuple; BROADCAST when the rows it
         touches cannot be located from the op alone (rare recovery paths)."""
@@ -107,6 +119,11 @@ class ShardedLogStore(LogBackend):
             ev = op[1]
             return [self._idx(ev.rec_op if ev.rec_op is not None
                               else ev.send_op)]
+        if kind == "log_events":
+            return sorted({self._log_entry_home(e) for e in op[1]})
+        if kind == "set_status_many":
+            homes = {self._status_entry_home(e) for e in op[1]}
+            return BROADCAST if BROADCAST in homes else sorted(homes)
         if kind == "put_event_blob":
             return [self._idx(op[2])]           # pre-computed home operator
         if kind == "set_status":
@@ -129,6 +146,11 @@ class ShardedLogStore(LogBackend):
 
     # ---- commit ----------------------------------------------------------
     def _commit(self, ops):
+        if not self._group_shards:
+            # no epoch protocol in play (volatile/plain shards flush
+            # synchronously inside _commit_routed): the barrier and the
+            # flusher probe are pure overhead on the hot path
+            return self._commit_under_barrier(ops)
         # shared epoch barrier: an epoch cut cannot run mid-commit, so a
         # multi-shard transaction lands entirely inside one flush epoch
         self._epoch_barrier.acquire_read()
@@ -136,18 +158,15 @@ class ShardedLogStore(LogBackend):
             token = self._commit_under_barrier(ops)
         finally:
             self._epoch_barrier.release_read()
-        if self._group_shards:
-            if self._flusher is None:
-                self._ensure_flusher()
-            # wake on a reached watermark, or whenever the flusher sits in
-            # its indefinite idle wait (it recomputes the interval deadline
-            # from the shards' batch timestamps on wakeup); a racy missed
-            # wake only delays until the next commit or maybe_flush nudge
-            if self._flusher_idle or \
-                    any(s._watermark_reached() for s in self._group_shards):
-                self._flush_wake.set()
-        else:
-            self.maybe_flush()
+        if self._flusher is None:
+            self._ensure_flusher()
+        # wake on a reached watermark, or whenever the flusher sits in
+        # its indefinite idle wait (it recomputes the interval deadline
+        # from the shards' batch timestamps on wakeup); a racy missed
+        # wake only delays until the next commit or maybe_flush nudge
+        if self._flusher_idle or \
+                any(s._watermark_reached() for s in self._group_shards):
+            self._flush_wake.set()
         return token
 
     def _ensure_flusher(self):
@@ -185,6 +204,16 @@ class ShardedLogStore(LogBackend):
             involved = list(range(self.n_shards))
         else:
             involved = sorted({i for r in routes for i in r})
+            if len(involved) == 1:
+                # fast path: the whole transaction — including a vectored
+                # run of events — homes on one shard, so the run costs
+                # exactly one lock acquisition and one routed commit
+                i = involved[0]
+                sh = self.shards[i]
+                with sh.shard_lock:
+                    self._validate(ops)
+                    t = sh._commit_routed(list(ops))
+                return {i: t} if t is not None else None
         locks = [self.shards[i].shard_lock for i in involved]
         for lk in locks:
             lk.acquire()
@@ -194,6 +223,9 @@ class ShardedLogStore(LogBackend):
             for op, route in zip(ops, routes):
                 if op[0] == "reassign_event":
                     self._plan_reassign(op, shard_ops)
+                elif op[0] in ("log_events", "set_status_many") and \
+                        (route is BROADCAST or len(route) > 1):
+                    self._split_batch_op(op, involved, shard_ops)
                 elif route is BROADCAST:
                     for i in involved:
                         # a broadcast assign (rec_op=None) must only reach
@@ -217,6 +249,19 @@ class ShardedLogStore(LogBackend):
             for lk in reversed(locks):
                 lk.release()
         return token or None
+
+    def _split_batch_op(self, op, involved, shard_ops):
+        """Slice a vectored op so each shard receives only the entries it
+        homes (entry order preserved). Replicating the whole run would
+        land rows in foreign shards, corrupting the home-routed queries
+        and duplicating rows in the sender-side merges."""
+        home = self._log_entry_home if op[0] == "log_events" \
+            else self._status_entry_home
+        for i in involved:
+            ents = [e for e in op[1]
+                    if home(e) is BROADCAST or home(e) == i]
+            if ents:
+                shard_ops[i].append((op[0], ents))
 
     def _validate(self, ops):
         """Conditional-op validation against the union image (locks held)."""

@@ -204,7 +204,16 @@ class OperatorRuntime:
                       # recovery-replay accounting (the bounded-replay
                       # claim: with checkpoint compaction these stay
                       # O(records since the last checkpoint))
-                      "recovered_resends": 0, "recovered_inputs": 0}
+                      "recovered_resends": 0, "recovered_inputs": 0,
+                      # vectored recovery reads (one range scan per
+                      # operator per table, not per-event iteration)
+                      "recovery_scan_batches": 0,
+                      # micro-batched hot path (runs of >1 event applied
+                      # through one vectored transaction)
+                      "batched_runs": 0, "batched_events": 0}
+        #: optional :class:`repro.core.batching.BatchGovernor`; set by the
+        #: engine/worker when micro-batching is enabled for this operator
+        self.governor = None
         # externally visible effects (channel acks, external-system writes)
         # awaiting the store's durability watermark (group commit); FIFO
         self._deferred: List[Tuple[Any, Callable[[], None]]] = []
@@ -346,6 +355,144 @@ class OperatorRuntime:
             self.generate(inset)
         return True
 
+    # ---- normal processing: a run of input events (micro-batching) --------
+    def handle_inputs(self, port: str, evs: List[Event]) -> int:
+        """Vectored Algorithm 2: apply a *run* of peeked events through one
+        log transaction and one coalesced ack pass. Returns the number of
+        events consumed from the channel head (the caller acks nothing —
+        consumption happens here, exactly as in ``handle_input``).
+
+        Exactly-once at every batch boundary: the run's log records stay
+        individually keyed, the whole run shares one commit (and thus one
+        durability token), and channel acks are issued only after that
+        commit — a crash anywhere in the run replays exactly the unacked
+        suffix through the obsolete filter."""
+        if len(evs) == 1:
+            return 1 if self.handle_input(port, evs[0]) else 0
+        with self.op_lock:
+            return self._handle_inputs_locked(port, evs)
+
+    def _handle_inputs_locked(self, port: str, evs: List[Event]) -> int:
+        op = self.op
+        ch = op.in_channels[port]
+        awaiting = getattr(op, "_awaiting_replay", None)
+        residue_ports = getattr(op, "_replay_pred_ports", ())
+        # -- phase 1: classify + state-update, strictly in FIFO order ------
+        plan: List[Tuple] = []     # ("drop", ev) | ("log", ev, insets)
+        flips: List[Tuple] = []    # set_status_many entries (replay->UNDONE)
+        last = self.ctx.last_acked.get(port, -1)
+        for ev in evs:
+            if ev.is_replay and self._awaited(port, ev) is not None:
+                # an awaited regenerated event cuts the run: it takes the
+                # scalar Example-10 path on the next engine pass
+                break
+            self.crash_point(op.id, "pre_filter")
+            if (not ev.is_replay and awaiting
+                    and port in residue_ports):
+                plan.append(("drop", ev))       # stale FIFO residue
+                continue
+            if ev.event_id <= last:
+                plan.append(("drop", ev))       # obsolete filter
+                continue
+            self.crash_point(op.id, "pre_state_update")
+            if ev.event_id > self.ctx.global_updated.get(port, -1):
+                op.update_global(ev)
+                self.ctx.global_updated[port] = ev.event_id
+            insets = op.on_event(ev)
+            if ev.is_replay:    # regenerated-but-never-processed
+                flips.append(((ev.send_op, ev.send_port, ev.event_id),
+                              UNDONE, "*", op.id, None))
+            plan.append(("log", ev, insets))
+            last = max(last, ev.event_id)
+        if not plan:
+            # run cut at its own head (awaited replay event): take the
+            # scalar Example-10 path now so a governed loop cannot spin
+            return 1 if self._handle_input_locked(port, evs[0]) else 0
+        # -- phase 2: ONE vectored transaction for the whole run -----------
+        logged = [p for p in plan if p[0] == "log"]
+        token = None
+        if logged:
+            txn = self.store.begin()
+            if flips:
+                txn.set_status_many(flips)
+            for _, ev, insets in logged:
+                txn.assign_insets((ev.send_op, ev.send_port, ev.event_id),
+                                  insets, rec_op=op.id)
+            try:
+                token = txn.commit()
+            except TxnAborted:
+                # some event was reassigned away (Alg 13): fall back to
+                # per-event commits, reusing the phase-1 state updates
+                return self._apply_run_fallback(port, ch, plan)
+            self.stats["txns"] += 1
+            self.ctx.last_acked[port] = max(
+                self.ctx.last_acked.get(port, -1), last)
+            for _ in logged:
+                self.crash_point(op.id, "post_ack_log")
+            self.stats["events_in"] += len(logged)
+            self.stats["batched_runs"] += 1
+            self.stats["batched_events"] += len(logged)
+        # -- phase 3: coalesced FIFO channel verbs -------------------------
+        if not self._deferred and self.store.is_durable(token):
+            ch.ack_run(len(plan))
+        else:
+            # interleave in plan order, coalescing same-verb stretches:
+            # drops ack immediately, logged events defer behind the run's
+            # single durability token (watermark rule)
+            i = 0
+            while i < len(plan):
+                kind = plan[i][0]
+                j = i
+                while j < len(plan) and plan[j][0] == kind:
+                    j += 1
+                if kind == "drop":
+                    ch.ack_run(j - i)
+                else:
+                    ch.defer_run(j - i)
+                    for _ in range(i, j):
+                        self._deferred.append((token, ch.release_ack))
+                i = j
+        trig = op.triggers()
+        if trig:
+            self.generate_many(trig)
+        return len(plan)
+
+    def _apply_run_fallback(self, port: str, ch, plan) -> int:
+        """The run's vectored commit aborted: re-commit per event so only
+        the reassigned-away events drop (scalar semantics). Phase 1 already
+        applied the state updates — ``on_event`` must not run twice."""
+        op = self.op
+        consumed = 0
+        for entry in plan:
+            if entry[0] == "drop":
+                ch.ack()
+                consumed += 1
+                continue
+            _, ev, insets = entry
+            txn = self.store.begin()
+            if ev.is_replay:
+                txn.set_status((ev.send_op, ev.send_port, ev.event_id),
+                               UNDONE, rec_op=op.id)
+            txn.assign_insets((ev.send_op, ev.send_port, ev.event_id),
+                              insets, rec_op=op.id)
+            try:
+                token = txn.commit()
+            except TxnAborted:
+                ch.ack()
+                consumed += 1
+                continue
+            self.stats["txns"] += 1
+            self.ctx.last_acked[port] = max(
+                self.ctx.last_acked.get(port, -1), ev.event_id)
+            self.crash_point(op.id, "post_ack_log")
+            self._ack(ch, token)
+            self.stats["events_in"] += 1
+            consumed += 1
+        trig = op.triggers()
+        if trig:
+            self.generate_many(trig)
+        return consumed
+
     def _awaited(self, port: str, ev: Event):
         for t in getattr(self.op, "_awaiting_replay", ()):
             if t[0] == port and t[1] == ev.event_id:
@@ -408,9 +555,15 @@ class OperatorRuntime:
             wssn = self.next_write_ssn(conn)
             write_events.append(Event(wssn, op.id, None, op.id, conn,
                                       body=body))
-        # Step 2+4: atomic transaction
+        # Step 2+4: atomic transaction — the run of new output events goes
+        # through one vectored log_events op (single-op framing for the
+        # segment/WAL append and one routing decision per run in the
+        # sharded store); single-output transactions keep the scalar op
+        # sequence byte-identical to the per-event path
         sid = self.new_state_id()
         txn = self.store.begin()
+        log_entries: List[Tuple[Event, str, Optional[str]]] = []
+        data_events: List[Event] = []
         for e in out_events:
             if replay_events and (e.send_port, e.event_id) in replay_events:
                 txn.set_status((e.send_op, e.send_port, e.event_id), UNDONE,
@@ -424,9 +577,15 @@ class OperatorRuntime:
                     # here and share the encode between the log
                     # (put_event_blob) and the wire (superframe payload)
                     e.cache_blob()
-                txn.log_event(e, UNDONE)
+                log_entries.append((e, UNDONE, None))
                 if not self.replay_mode:
-                    txn.put_event_data(e)
+                    data_events.append(e)
+        if len(log_entries) == 1:
+            txn.log_event(log_entries[0][0], UNDONE)
+        elif log_entries:
+            txn.log_events(log_entries)
+        for e in data_events:
+            txn.put_event_data(e)
         for w in write_events:
             txn.log_event(w, UNDONE)
             txn.put_event_data(w)
@@ -465,6 +624,104 @@ class OperatorRuntime:
         for w in write_events:
             self._after_durable(token, lambda w=w: self.execute_write(w))
         op.clear_inset(inset_id)
+
+    def generate_many(self, inset_ids: Sequence[str]) -> None:
+        """Vectored Algorithm 3 over a run of triggered Input Sets: all
+        their Output Sets go through ONE atomic transaction (one vectored
+        ``log_events``, one state snapshot, one commit) and one batched
+        dispatch pass.  Used by the batched hot path only — recovery keeps
+        the scalar per-InSet generates."""
+        if len(inset_ids) == 1:
+            return self.generate(inset_ids[0])
+        with self.op_lock:
+            return self._generate_many_locked(list(inset_ids))
+
+    def _generate_many_locked(self, inset_ids: List[str]) -> None:
+        op = self.op
+        # SSN counters rewind to this snapshot if the vectored commit
+        # aborts (scaled-down reassignment) and the run falls back to
+        # scalar generates
+        ssn_snap = dict(self.ctx.ssn)
+        wssn_snap = dict(self.ctx.write_ssn)
+        runs: List[Tuple[str, List[Event], List[Event], List[Tuple]]] = []
+        for inset_id in inset_ids:
+            op.simulate_work()
+            self.pending_reads = []
+            outputs, writes = op.generate(inset_id)
+            self.crash_point(op.id, "pre_log")
+            out_events: List[Event] = []
+            for port, body in outputs:
+                ssn = self.next_ssn(port)
+                for ch in op.out_channels.get(port, []):
+                    out_events.append(Event(ssn, op.id, port, ch.rec_op,
+                                            ch.rec_port, body=body))
+            write_events: List[Event] = []
+            for conn, body in writes:
+                wssn = self.next_write_ssn(conn)
+                write_events.append(Event(wssn, op.id, None, op.id, conn,
+                                          body=body))
+            runs.append((inset_id, out_events, write_events,
+                         list(self.pending_reads)))
+        sid = self.new_state_id()
+        txn = self.store.begin()
+        log_entries: List[Tuple[Event, str, Optional[str]]] = []
+        for inset_id, out_events, write_events, reads in runs:
+            for e in out_events:
+                if not self.replay_mode and \
+                        any(getattr(ch, "prefer_blob", False)
+                            for ch in op.out_channels.get(e.send_port, ())):
+                    e.cache_blob()
+                log_entries.append((e, UNDONE, None))
+        if len(log_entries) == 1:
+            txn.log_event(log_entries[0][0], UNDONE)
+        elif log_entries:
+            txn.log_events(log_entries)
+        for inset_id, out_events, write_events, reads in runs:
+            if not self.replay_mode:
+                for e in out_events:
+                    txn.put_event_data(e)
+            for w in write_events:
+                txn.log_event(w, UNDONE)
+                txn.put_event_data(w)
+            txn.set_inset_status(op.id, inset_id, DONE, require_rows=True)
+            if self.lineage_out:
+                for ra, effect in reads:
+                    rev = Event(ra.action_id, op.id, f"{ra.conn_id}.r",
+                                None, None, body=effect)
+                    txn.log_event(rev, DONE, inset_id)
+                    txn.put_event_data(rev)
+                seen = set()
+                for e in out_events:
+                    if e.send_port in self.lineage_out and \
+                            (e.send_port, e.event_id) not in seen:
+                        txn.put_lineage(e.event_id, op.id, e.send_port,
+                                        inset_id)
+                        seen.add((e.send_port, e.event_id))
+        txn.put_state(op.id, sid, self._state_blob(),
+                      keep_history=self.keep_state_history)
+        try:
+            token = txn.commit()
+        except TxnAborted:
+            # one of the InSets vanished under the whole-run transaction
+            # (Alg 13): rewind the SSNs and fall back to scalar generates,
+            # so only the reassigned-away InSets drop their outputs
+            self.ctx.ssn.clear()
+            self.ctx.ssn.update(ssn_snap)
+            self.ctx.write_ssn.clear()
+            self.ctx.write_ssn.update(wssn_snap)
+            for inset_id in inset_ids:
+                self._generate_locked(inset_id)
+            return
+        self.stats["txns"] += 1
+        for inset_id, out_events, write_events, _ in runs:
+            self.crash_point(op.id, "post_log")
+            for e in out_events:
+                self._send(e)
+            self.stats["events_out"] += len(out_events)
+            self.crash_point(op.id, "post_send")
+            for w in write_events:
+                self._after_durable(token, lambda w=w: self.execute_write(w))
+            op.clear_inset(inset_id)
 
     def _send(self, e: Event):
         for ch in self.op.out_channels.get(e.send_port, []):

@@ -71,6 +71,7 @@ from multiprocessing import AuthenticationError
 from multiprocessing import connection as mpc
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core.batching import make_governor
 from repro.core.builtin import GeneratorSource, ScratchStore
 from repro.core.logstore.base import LogBackend, TxnAborted
 from repro.core.operator import OperatorRuntime, SimulatedCrash
@@ -281,6 +282,7 @@ def _worker_main(bootstrap: WorkerBootstrap, rpc_conn, tr_conn):
             stop_flag=lambda: wt.stopped,
             replay_mode=op_id in bootstrap.replay_ops,
             keep_state_history=bool(lin_out))
+        runtimes[op_id].governor = make_governor(bootstrap.batching)
 
     if recover:
         for op_id in group_ops:
@@ -298,16 +300,37 @@ def _worker_main(bootstrap: WorkerBootstrap, rpc_conn, tr_conn):
     last_stats = 0.0
 
     def step_op(op) -> bool:
+        rt = runtimes[op.id]
+        gov = rt.governor
         if isinstance(op, GeneratorSource):
+            if gov is not None:
+                n = gov.limit(op.pending_emits())
+                if n > 1:
+                    t0 = time.monotonic()
+                    k = op.step_run(n)
+                    gov.observe(k, time.monotonic() - t0)
+                    return k > 0
             return op.step()
         progressed = False
         for port in op.input_ports:
             ch = op.in_channels.get(port)
             if ch is None:
                 continue
+            if gov is not None:
+                # governed run draining: apply already-delivered backlog
+                # through one vectored pass (see docs/batching.md)
+                n = gov.limit(ch.unprocessed())
+                if n > 1:
+                    evs = ch.peek_run(n)
+                    if evs:
+                        t0 = time.monotonic()
+                        k = rt.handle_inputs(port, evs)
+                        gov.observe(k, time.monotonic() - t0)
+                        progressed = progressed or k > 0
+                    continue
             ev = ch.peek()
             if ev is not None:
-                runtimes[op.id].handle_input(port, ev)
+                rt.handle_input(port, ev)
                 progressed = True
         return progressed
 
@@ -598,6 +621,11 @@ class ProcessEngineDriver:
         # _op_stats_base when the incarnation dies)
         self._op_stats_base: Dict[str, Dict[str, int]] = {}
         self._op_stats_live: Dict[str, Dict[str, int]] = {}
+        # full per-operator counter dicts (txns, batched_runs,
+        # recovery_scan_batches, ...), same base/live split — op_stats()
+        # keeps its collapsed events_in+events_out shape for the benches
+        self._op_detail_base: Dict[str, Dict[str, Dict[str, int]]] = {}
+        self._op_detail_live: Dict[str, Dict[str, Dict[str, int]]] = {}
         # wire-level transport counters (superframes/bytes/coalescing),
         # same base/live split per group
         self._wire_base: Dict[str, Dict[str, int]] = {}
@@ -623,6 +651,8 @@ class ProcessEngineDriver:
         self._op_stats_live[group] = {
             op: s.get("events_in", 0) + s.get("events_out", 0)
             for op, s in stats.items()}
+        self._op_detail_live[group] = {op: dict(s)
+                                       for op, s in stats.items()}
 
     def pump_all(self):
         """Re-deliver/rebroadcast after a topology change (scaling)."""
@@ -949,6 +979,11 @@ class ProcessEngineDriver:
         base = self._op_stats_base.setdefault(group, {})
         for op, n in self._op_stats_live.pop(group, {}).items():
             base[op] = base.get(op, 0) + n
+        dbase = self._op_detail_base.setdefault(group, {})
+        for op, s in self._op_detail_live.pop(group, {}).items():
+            acc = dbase.setdefault(op, {})
+            for k, n in s.items():
+                acc[k] = acc.get(k, 0) + n
         wbase = self._wire_base.setdefault(group, {})
         for k, n in self._wire_live.pop(group, {}).items():
             wbase[k] = wbase.get(k, 0) + n
@@ -964,6 +999,19 @@ class ProcessEngineDriver:
             for g, ops in self._op_stats_live.items():
                 for op, n in ops.items():
                     out[op] = out.get(op, 0) + n
+            return out
+
+    def op_stats_detail(self) -> Dict[str, Dict[str, int]]:
+        """Full per-operator counter dicts (txns, batched_runs/_events,
+        recovery_scan_batches, ...) summed across incarnations."""
+        with self.lock:
+            out: Dict[str, Dict[str, int]] = {}
+            for src in (self._op_detail_base, self._op_detail_live):
+                for g, ops in src.items():
+                    for op, s in ops.items():
+                        acc = out.setdefault(op, {})
+                        for k, n in s.items():
+                            acc[k] = acc.get(k, 0) + n
             return out
 
     def wire_stats(self) -> Dict[str, float]:

@@ -53,6 +53,9 @@ def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
     if rt.replay_mode:
         _prepare_replay(rt)
     else:
+        # one range scan per operator (single sqlite query / sequential
+        # segment-image read), never per-event round trips
+        rt.stats["recovery_scan_batches"] += 1
         for ev, status in rt.store.fetch_resend_events(op.id):
             rt._send(ev)
             rt.stats["recovered_resends"] += 1
@@ -76,17 +79,31 @@ def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
     op._awaiting_replay = set()
     op._replay_pred_ports = set(replay_pred_ports)
     mark_txn = rt.store.begin()
-    n_marked = 0
-    for ev, inset_id, status in rt.store.fetch_ack_events(op.id):
+    marks = []
+    # Alg 9 step 1 analogue for Input Set ids: a batched input transaction
+    # durably assigns freshly minted ids without snapshotting state (the
+    # counter only rides generate transactions), so after a crash between
+    # the two the restored counter can trail ids already bound to logged
+    # events.  Ride the ack-events scan below to advance past them — a
+    # reissued id would silently merge two unrelated Input Sets and cross
+    # their lineage.
+    inset_prefix = op.id + ":"
+    rt.stats["recovery_scan_batches"] += 1      # one ack-events range scan
+    ack_rows = list(rt.store.fetch_ack_events(op.id))
+    for _ev, inset_id, _status in ack_rows:
+        if inset_id and inset_id.startswith(inset_prefix):
+            suffix = inset_id[len(inset_prefix):]
+            if suffix.isdigit() and int(suffix) > rt.ctx.inset_counter:
+                rt.ctx.inset_counter = int(suffix)
+    for ev, inset_id, status in ack_rows:
         rt.stats["recovered_inputs"] += 1
         port = ev.rec_port
         if port in replay_pred_ports and not rt.replay_mode:
             # Alg 11 step 3: payload unavailable — mark "replay" and await
             # the regenerated event from the replay predecessor.
-            mark_txn.set_status((ev.send_op, ev.send_port, ev.event_id),
-                                REPLAY, rec_op=op.id)
+            marks.append(((ev.send_op, ev.send_port, ev.event_id),
+                          REPLAY, "*", op.id, None))
             op._awaiting_replay.add((port, ev.event_id, inset_id))
-            n_marked += 1
             continue
         if ev.event_id > rt.ctx.global_updated.get(port, -1):
             op.update_global(ev)
@@ -95,7 +112,9 @@ def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
         op.on_event(ev, recovery_inset=inset_id)
         for inset in op.triggers():
             rt.generate(inset, replay_events=replay_out or None)
-    if n_marked:
+    if marks:
+        # one vectored status flip for the whole awaited-replay set
+        mark_txn.set_status_many(marks)
         mark_txn.commit()
     op._replay_pending = {}
     if rt.replay_mode:
@@ -126,6 +145,7 @@ def _prepare_replay(rt: OperatorRuntime):
             for eid in store.undone_outputs_after(op.id, port, mn):
                 replay_out[(port, eid)] = None
     # restarted (or replay): also regenerate own unacked undone outputs
+    rt.stats["recovery_scan_batches"] += 1      # one resend range scan
     for ev, status in store.fetch_resend_events(op.id):
         replay_out[(ev.send_port, ev.event_id)] = None
     # map each output to its Input Set via EVENT_LINEAGE (the filtered
@@ -144,9 +164,10 @@ def _prepare_replay(rt: OperatorRuntime):
     txn = store.begin()
     for ins in insets:
         txn.set_inset_status(op.id, ins, REPLAY)
-    for (port, eid) in replay_out:
-        # flip only still-undone receiver rows (done consumers keep DONE)
-        txn.set_status((op.id, port, eid), REPLAY, only_status=UNDONE)
+    # one vectored flip for the whole replay set (only still-undone
+    # receiver rows flip — done consumers keep DONE)
+    txn.set_status_many([((op.id, port, eid), REPLAY, "*", None, UNDONE)
+                         for (port, eid) in replay_out])
     txn.put_state(op.id, rt.new_state_id(), rt._state_blob(),
                   keep_history=rt.keep_state_history)
     txn.commit()

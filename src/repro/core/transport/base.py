@@ -95,6 +95,29 @@ class ChannelEndpoint(abc.ABC):
     def reset_pending(self) -> None:
         """Receiver restart: unreleased events become deliverable again."""
 
+    # -- vectored receiver verbs (micro-batching) --------------------------
+    # Defaults degrade to the scalar verbs so every endpoint is correct;
+    # implementations override to amortize locks / control messages when a
+    # run of events is consumed in one pass.
+    def peek_run(self, n: int) -> list:
+        """Up to ``n`` events from the head of the unprocessed suffix (FIFO
+        snapshot; nothing is consumed until acked/deferred)."""
+        ev = self.peek()
+        return [ev] if n > 0 and ev is not None else []
+
+    def ack_run(self, n: int) -> int:
+        """Vectored ``ack``; returns the count actually consumed."""
+        k = 0
+        while k < n and self.ack() is not None:
+            k += 1
+        return k
+
+    def defer_run(self, n: int) -> int:
+        """Vectored ``defer_ack``; returns the count actually deferred."""
+        for _ in range(n):
+            self.defer_ack()
+        return n
+
     @abc.abstractmethod
     def __len__(self) -> int:
         """Events occupying credits (buffered, including deferred)."""
@@ -150,6 +173,9 @@ class WorkerBootstrap:
     lineage_ports: Dict[str, Tuple]
     replay_ops: frozenset
     control: Optional[Tuple[Any, bytes]] = None
+    #: batching-governor spec for the group's receivers ("off" | "adaptive"
+    #: | int); None defers to the LOGIO_BATCH env var in the worker
+    batching: Optional[Any] = None
 
     @property
     def channels(self) -> List[ChannelSpec]:

@@ -100,6 +100,15 @@ class Channel(ChannelEndpoint):
             j = self._pending + i
             return self._buf[j] if len(self._buf) > j else None
 
+    def peek_run(self, n: int) -> List[Event]:
+        """Up to ``n`` events from the head of the unprocessed suffix, in
+        FIFO order — the receiver's micro-batch. A snapshot only: events
+        stay buffered until individually acked/deferred, so a crash
+        mid-run re-delivers the unacked suffix."""
+        with self._cv:
+            j = self._pending
+            return list(self._buf[j:j + n])
+
     def ack(self) -> Optional[Event]:
         """Immediately remove the event ``peek`` returned."""
         with self._cv:
@@ -107,6 +116,24 @@ class Channel(ChannelEndpoint):
                 if len(self._buf) > self._pending else None
             self._cv.notify_all()
             return ev
+
+    def ack_run(self, n: int) -> int:
+        """Vectored ``ack``: remove the first ``n`` unprocessed events in
+        one lock acquisition. Returns the count actually removed."""
+        with self._cv:
+            k = min(n, len(self._buf) - self._pending)
+            if k > 0:
+                del self._buf[self._pending:self._pending + k]
+                self._cv.notify_all()
+            return k
+
+    def defer_run(self, n: int) -> int:
+        """Vectored ``defer_ack``: mark the first ``n`` unprocessed events
+        processed-but-unreleased in one lock acquisition."""
+        with self._cv:
+            k = min(n, len(self._buf) - self._pending)
+            self._pending += k
+            return k
 
     def defer_ack(self):
         """Mark the event ``peek`` returned as processed; it stays buffered

@@ -79,6 +79,19 @@ class RoutedWorkerChannel(Channel):
             self._wt.conn.send(("release", self.name))
         return ev
 
+    # vectored verbs: one control message per run instead of one per event
+    def ack_run(self, n: int) -> int:
+        k = Channel.ack_run(self, n)
+        if k:
+            self._wt.conn.send(("ackn", self.name, k))
+        return k
+
+    def defer_run(self, n: int) -> int:
+        k = Channel.defer_run(self, n)
+        if k:
+            self._wt.conn.send(("defern", self.name, k))
+        return k
+
 
 class RoutedWorker(WorkerTransport):
     """Worker half: replica channels + the credit ledger + the pipe pump.
@@ -318,17 +331,32 @@ class RoutedSupervisor(SupervisorTransport):
                     ch = d.ch_by_name.get(msg[1])
                     if ch is not None and ch.ack() is not None:
                         self.inflight[msg[1]] -= 1
-                        grant = (msg[1],) + self._sender_of_locked(ch)
+                        grant = (msg[1],) + self._sender_of_locked(ch) + (1,)
+                elif kind == "ackn":
+                    # vectored ack: k events leave the authoritative buffer
+                    # under one lock hold, one credit grant of k returns
+                    ch = d.ch_by_name.get(msg[1])
+                    if ch is not None:
+                        k = ch.ack_run(msg[2])
+                        if k:
+                            self.inflight[msg[1]] -= k
+                            grant = (msg[1],) + self._sender_of_locked(ch) \
+                                + (k,)
                 elif kind == "defer":
                     ch = d.ch_by_name.get(msg[1])
                     if ch is not None:
                         ch.defer_ack()
                         self.inflight[msg[1]] -= 1
                         # no grant: deferred events still hold their credit
+                elif kind == "defern":
+                    ch = d.ch_by_name.get(msg[1])
+                    if ch is not None:
+                        k = ch.defer_run(msg[2])
+                        self.inflight[msg[1]] -= k
                 elif kind == "release":
                     ch = d.ch_by_name.get(msg[1])
                     if ch is not None and ch.release_ack() is not None:
-                        grant = (msg[1],) + self._sender_of_locked(ch)
+                        grant = (msg[1],) + self._sender_of_locked(ch) + (1,)
                 elif kind == "idle":
                     h.last_idle = msg[1]
                 elif kind == "stats":
@@ -339,9 +367,9 @@ class RoutedSupervisor(SupervisorTransport):
             # a fresh incarnation's initial window already reflects the
             # pop, so landing it there would double-grant.
             if grant is not None:
-                name, gh, inc = grant
+                name, gh, inc, k = grant
                 if gh is not None:
-                    gh.send(("credit", name, 1), incarnation=inc)
+                    gh.send(("credit", name, k), incarnation=inc)
             if pump is not None:
                 self._pump(pump)
 

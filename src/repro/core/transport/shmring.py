@@ -328,8 +328,9 @@ class _ShmConn(BatchedConn):
             data = ring.read_avail()
             if data:
                 idle = 0
-                for entry in dec.feed(data):
-                    wt.dispatch(entry)
+                entries = list(dec.feed(data))
+                if entries:
+                    wt.dispatch_many(entries)
             else:
                 # spin briefly (a burst is usually mid-flight), then doze
                 idle += 1

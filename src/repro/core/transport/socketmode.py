@@ -156,6 +156,17 @@ class BatchedConn:
             self._cv.notify()
             return True
 
+    def send_ctrl_many(self, kind: str, name: str, event_ids) -> bool:
+        """A run of same-kind control entries under one queue lock — the
+        batched consumption verbs emit one credit per event (id-matched
+        FIFO on the sender), but need not pay the lock per entry."""
+        with self._cv:
+            if not self.alive:
+                return False
+            self._q.extend((kind, name, eid) for eid in event_ids)
+            self._cv.notify()
+            return True
+
     # -- threads -----------------------------------------------------------
     def start(self, wt: "SocketWorker", tag: str) -> None:
         self._wt = wt
@@ -234,8 +245,9 @@ class _WireConn(BatchedConn):
             if not data:
                 self.alive = False
                 return
-            for entry in dec.feed(data):
-                wt.dispatch(entry)
+            entries = list(dec.feed(data))
+            if entries:
+                wt.dispatch_many(entries)
 
     def close(self):
         super().close()
@@ -350,6 +362,16 @@ class SocketRecvChannel(Channel):
             self._buf.append(ev)
         self._wt.bump()
 
+    def deliver_wire_many(self, payloads) -> None:
+        """A decoded run of events for this channel: rebuild outside the
+        lock, append under one acquisition, bump once."""
+        evs = [Event(eid, self.send_op, self.send_port,
+                     self.rec_op, self.rec_port, body=body, header=header)
+               for (eid, header, body) in payloads]
+        with self._cv:
+            self._buf.extend(evs)
+        self._wt.bump()
+
     def put(self, ev, stop_flag=None, timeout: float = 0.05) -> bool:
         raise RuntimeError(f"{self.name}: put on the receiving endpoint")
 
@@ -382,6 +404,40 @@ class SocketRecvChannel(Channel):
             self._ctrl("release", ev)
             self._wt.bump()
         return ev
+
+    # -- batched consumption verbs -----------------------------------------
+    # The inherited Channel.ack_run/defer_run mutate only the local replica;
+    # here every consumed event must also return its credit to the sender,
+    # so the vectored verbs collect the run under one lock and enqueue the
+    # whole credit burst with one queue acquisition.
+
+    def ack_run(self, n: int) -> int:
+        with self._cv:
+            k = min(n, len(self._buf) - self._pending)
+            evs = self._buf[self._pending:self._pending + k]
+            if k > 0:
+                del self._buf[self._pending:self._pending + k]
+                self._cv.notify_all()
+        if evs:
+            entry = self._wt.conn_in_for(self.name)
+            if entry is not None:
+                entry.send_ctrl_many("ack", self.name,
+                                     [ev.event_id for ev in evs])
+            self._wt.bump()
+        return k
+
+    def defer_run(self, n: int) -> int:
+        with self._cv:
+            k = min(n, len(self._buf) - self._pending)
+            evs = self._buf[self._pending:self._pending + k]
+            self._pending += k
+        if evs:
+            entry = self._wt.conn_in_for(self.name)
+            if entry is not None:
+                entry.send_ctrl_many("defer", self.name,
+                                     [ev.event_id for ev in evs])
+            self._wt.bump()
+        return k
 
 
 # ---------------------------------------------------------------------------
@@ -520,6 +576,31 @@ class SocketWorker(WorkerTransport):
                     ch.remote_defer(entry[2])
                 elif kind == "release":
                     ch.remote_release(entry[2])
+
+    def dispatch_many(self, entries: List[Tuple]) -> None:
+        """Apply a decoded superframe worth of entries: consecutive event
+        entries for the same channel land as one ``deliver_wire_many``
+        (one lock, one activity bump); control entries keep their relative
+        order against the events around them."""
+        i, n = 0, len(entries)
+        while i < n:
+            entry = entries[i]
+            if entry[0] != "ev":
+                self.dispatch(entry)
+                i += 1
+                continue
+            name = entry[1]
+            j = i + 1
+            while j < n and entries[j][0] == "ev" and entries[j][1] == name:
+                j += 1
+            ch = self._recv_chs.get(name)
+            if ch is not None:
+                if j - i == 1:
+                    ch.deliver_wire(entry[2], entry[3], entry[4])
+                else:
+                    ch.deliver_wire_many(
+                        [(e[2], e[3], e[4]) for e in entries[i:j]])
+            i = j
 
     # -- threads -----------------------------------------------------------
     def _accept_loop(self):

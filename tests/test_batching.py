@@ -1,0 +1,317 @@
+"""Adaptive micro-batching: governor units, vectored backend batch ops,
+batched recovery scans, and mid-batch SIGKILL exactly-once.
+
+The batched hot path must be invisible to the protocol: every record of a
+vectored ``log_events`` / ``set_status_many`` stays individually keyed, so
+a crash landing inside a batch replays exactly the unlogged suffix — at
+most one batch beyond the durability watermark plus the credit window of
+in-flight events."""
+import os
+
+import pytest
+
+from repro.core import Engine, FailureInjector, build_store
+from repro.core.batching import (DEFAULT_MAX_BATCH, BatchGovernor,
+                                 make_governor, resolve_batching)
+from repro.core.events import DONE, REPLAY, UNDONE, Event
+from tests.helpers import linear_pipeline, mk_store, sink_outputs
+
+#: pipeline default channel capacity (Pipeline.connect) — bounds how many
+#: in-flight events a kill can strand beyond the watermark
+CHANNEL_CAPACITY = 256
+
+
+# ---------------------------------------------------------------------------
+# governor units
+# ---------------------------------------------------------------------------
+
+def test_resolve_batching_specs():
+    assert resolve_batching("off") == "off"
+    assert resolve_batching("adaptive") == "adaptive"
+    assert resolve_batching(16) == 16
+    assert resolve_batching("16") == 16
+    with pytest.raises(ValueError):
+        resolve_batching(0)
+    with pytest.raises(ValueError):
+        resolve_batching(True)
+    with pytest.raises(ValueError):
+        resolve_batching("junk")
+
+
+def test_resolve_batching_env(monkeypatch):
+    monkeypatch.delenv("LOGIO_BATCH", raising=False)
+    assert resolve_batching(None) == "off"
+    monkeypatch.setenv("LOGIO_BATCH", "adaptive")
+    assert resolve_batching(None) == "adaptive"
+    monkeypatch.setenv("LOGIO_BATCH", "8")
+    assert resolve_batching(None) == 8
+    # an explicit spec wins over the environment
+    assert resolve_batching("off") == "off"
+
+
+def test_make_governor_off_is_none():
+    assert make_governor("off") is None
+    assert make_governor(1) is None
+    assert make_governor("adaptive") is not None
+    assert make_governor(4) is not None
+
+
+def test_governor_degenerates_to_one_when_idle():
+    """The moderate-rate regime: one queued event at a time -> batch=1,
+    the scalar path, unchanged latency."""
+    gov = BatchGovernor("adaptive")
+    assert gov.limit(0) == 1
+    assert gov.limit(1) == 1
+    gov = BatchGovernor(32)
+    assert gov.limit(1) == 1
+
+
+def test_governor_fixed_mode_caps_at_spec():
+    gov = BatchGovernor(8)
+    assert gov.limit(100) == 8
+    assert gov.limit(5) == 5
+
+
+def test_governor_adaptive_respects_latency_bound():
+    gov = BatchGovernor("adaptive", max_batch=1000, latency_bound=0.010)
+    # teach it events cost ~1ms each: a run must stay under ~10 events
+    for _ in range(50):
+        gov.observe(10, 0.010)
+    assert gov.limit(1000) <= 12
+    # cheap events: the cap opens up to max_batch
+    for _ in range(200):
+        gov.observe(100, 0.0001)
+    assert gov.limit(1000) == 1000
+    s = gov.stats()
+    assert s["mode"] == "adaptive" and s["ev_cost"] > 0
+
+
+# ---------------------------------------------------------------------------
+# vectored backend ops: one txn, individually keyed rows, on every stack
+# ---------------------------------------------------------------------------
+
+BATCH_SPECS = ["memory", "memory+sharded", "memory+group",
+               "memory+sharded+group", "sqlite", "sqlite+group",
+               "segment", "segment+group", "sqlite+sharded+group"]
+
+
+def _ev(i, port="out"):
+    return Event(i, "A", port, "B", "in")
+
+
+def _mk(spec, **kw):
+    return mk_store(spec, shards=3, batch_size=4, interval=0.001, **kw)
+
+
+@pytest.mark.parametrize("spec", BATCH_SPECS)
+def test_log_events_rows_individually_keyed(spec):
+    store = _mk(spec)
+    txn = store.begin()
+    txn.log_events([(_ev(i), UNDONE, None) for i in range(5)])
+    txn.commit()
+    store.flush()
+    assert [e.event_id for e, _ in store.fetch_resend_events("A")] == \
+        [0, 1, 2, 3, 4]
+    # each row is independently addressable — flip two of them
+    txn = store.begin()
+    txn.set_status_many([(("A", "out", 1), DONE, None, None, None),
+                         (("A", "out", 3), DONE, None, None, None)])
+    txn.commit()
+    store.flush()
+    assert [e.event_id for e, _ in store.fetch_resend_events("A")] == \
+        [0, 2, 4]
+
+
+@pytest.mark.parametrize("spec", BATCH_SPECS)
+def test_set_status_many_only_status_guard(spec):
+    """The conditional form (only_status) must hold per entry: DONE rows
+    keep DONE when a replay flip targets still-UNDONE rows."""
+    store = _mk(spec)
+    txn = store.begin()
+    txn.log_events([(_ev(i), UNDONE, None) for i in range(3)])
+    txn.commit()
+    txn = store.begin()
+    txn.set_status(("A", "out", 0), DONE)
+    txn.commit()
+    txn = store.begin()
+    txn.set_status_many([(("A", "out", i), REPLAY, "*", None, UNDONE)
+                         for i in range(3)])
+    txn.commit()
+    store.flush()
+    assert store.event_status(("A", "out", 0)) == [(None, DONE)]
+    assert store.event_status(("A", "out", 1)) == [(None, REPLAY)]
+    assert store.event_status(("A", "out", 2)) == [(None, REPLAY)]
+
+
+@pytest.mark.parametrize("spec", ["memory+sharded", "memory+sharded+group",
+                                  "sqlite+sharded+group"])
+def test_log_events_split_across_shards(spec):
+    """A run whose records home to different shards must land each record
+    exactly once, queryable from both the sender and receiver views."""
+    store = _mk(spec)
+    txn = store.begin()
+    recs = []
+    for i in range(6):
+        e = Event(i, f"OP{i % 3}", "out", f"OP{(i + 1) % 3}", "in")
+        recs.append((e, UNDONE, None))
+    txn.log_events(recs)
+    txn.commit()
+    store.flush()
+    for i in range(3):
+        assert [e.event_id for e, _ in store.fetch_resend_events(f"OP{i}")] \
+            == [i, i + 3]
+
+
+@pytest.mark.parametrize("spec", ["sqlite", "sqlite+group",
+                                  "segment", "segment+group"])
+def test_batched_rows_survive_reopen(spec, tmp_path):
+    """Crash/reopen: rows written through one vectored txn replay from
+    disk (sqlite WAL / segment frames) as individually keyed records."""
+    ext = "db" if spec.startswith("sqlite") else "segs"
+    path = str(tmp_path / f"log.{ext}")
+    store = _mk(spec, path=path)
+    txn = store.begin()
+    txn.log_events([(_ev(i), UNDONE, None) for i in range(4)])
+    txn.commit()
+    txn = store.begin()
+    txn.set_status_many([(("A", "out", 0), DONE, None, None, None)])
+    txn.commit()
+    store.flush()
+    store.close()
+    reopened = _mk(spec, path=path)
+    assert [e.event_id for e, _ in reopened.fetch_resend_events("A")] == \
+        [1, 2, 3]
+    assert reopened.event_status(("A", "out", 0)) == [(None, DONE)]
+
+
+def test_group_commit_batch_lost_before_flush():
+    """A vectored log txn lost in a crash before its flush loses the WHOLE
+    run atomically — no partial batch becomes durable."""
+    store = build_store("memory+group", batch_size=100, interval=60.0)
+    txn = store.begin()
+    txn.log_events([(_ev(i), UNDONE, None) for i in range(5)])
+    token = txn.commit()
+    store.crash()
+    assert not store.is_durable(token)
+    assert store.fetch_resend_events("A") == []
+
+
+# ---------------------------------------------------------------------------
+# batched recovery read path (one range scan per operator)
+# ---------------------------------------------------------------------------
+
+def test_recovery_scan_batches_counter(store_spec):
+    """Each recovery performs exactly one resend scan + one ack-events
+    scan — never per-event round trips."""
+    build, expected = linear_pipeline(writes=1)
+    inj = FailureInjector([("win", "post_ack_log", 2)])
+    eng = Engine(build(), mode="step", injector=inj,
+                 store=_mk(store_spec))
+    assert eng.run_to_completion()
+    assert sink_outputs(eng) == expected
+    detail = eng.op_stats_detail()
+    win = detail["win"]
+    assert win["recovered_inputs"] > 0
+    assert win["recovery_scan_batches"] == 2       # one resend + one ack scan
+    for op, s in detail.items():
+        if op != "win":
+            assert s["recovery_scan_batches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# batched hot path end-to-end (thread mode, governor forced on)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batching", ["adaptive", 16])
+def test_batched_pipeline_exactly_once(batching, store_spec):
+    build, expected = linear_pipeline(n_events=64, window=4, sink_target=16)
+    eng = Engine(build(), mode="thread", store=_mk(store_spec),
+                 batching=batching)
+    eng.start()
+    assert eng.wait(30)
+    eng.stop()
+    assert sink_outputs(eng) == expected
+    detail = eng.op_stats_detail()
+    # saturation (rate=0): the governed operators actually formed runs
+    assert any(s.get("batched_events", 0) > 0 for s in detail.values()), \
+        detail
+
+
+def test_batched_pipeline_with_crash_thread_mode(store_spec):
+    build, expected = linear_pipeline(n_events=64, window=4, sink_target=16,
+                                      writes=1)
+    inj = FailureInjector([("map", "pre_state_update", 5),
+                           ("win", "post_ack_log", 3)])
+    eng = Engine(build(), mode="thread", store=_mk(store_spec),
+                 injector=inj, batching="adaptive", restart_delay=0.01)
+    eng.start()
+    assert eng.wait(30)
+    eng.stop()
+    assert sink_outputs(eng) == expected
+
+
+# ---------------------------------------------------------------------------
+# mid-batch SIGKILL: real process death landing inside a batch apply/flush
+# ---------------------------------------------------------------------------
+
+KILL_SPECS = ["memory", "sqlite+group", "segment+group"]
+KILL_TRANSPORTS = ["routed", "socket", "shm"]
+
+# kills landing inside the batched phases: mid-classify (phase 1), after
+# the one vectored commit before the coalesced acks (phase 3), and inside
+# a batched source emission
+KILL_POINTS = [
+    ("src", "source_post_log", 2),
+    ("map", "pre_state_update", 5),
+    ("win", "post_ack_log", 3),
+]
+
+
+@pytest.mark.parametrize("spec", KILL_SPECS)
+@pytest.mark.parametrize("transport", KILL_TRANSPORTS)
+@pytest.mark.parametrize("op_id,point,nth", KILL_POINTS)
+def test_mid_batch_sigkill_exactly_once(op_id, point, nth, spec, transport,
+                                        proc_ctx):
+    build, expected = linear_pipeline(n_events=64, window=4, sink_target=16,
+                                      writes=1)
+    inj = FailureInjector([(op_id, point, nth)])
+    eng = Engine(build(), mode="process", store=_mk(spec), injector=inj,
+                 transport=transport, ctx=proc_ctx, batching="adaptive",
+                 restart_delay=0.02)
+    eng.start()
+    ok = eng.wait(60)
+    eng.stop()
+    assert ok, (spec, transport, op_id, point)
+    assert sink_outputs(eng) == expected, (spec, transport, op_id, point)
+    win_writes = [b for b in eng.external.committed()
+                  if isinstance(b, dict) and "inset" in b]
+    assert len(win_writes) == 16, (spec, transport, op_id, point)
+    assert eng.failures == 1, (spec, transport, op_id, point)
+    # replay length: at most one batch beyond the durability watermark
+    # (plus the credit window of events that were legitimately in flight)
+    bound = DEFAULT_MAX_BATCH + CHANNEL_CAPACITY
+    detail = eng.op_stats_detail()
+    for op, s in detail.items():
+        assert s.get("recovered_resends", 0) <= bound, (op, s)
+        assert s.get("recovered_inputs", 0) <= bound, (op, s)
+
+
+def test_env_forced_governor_reaches_workers(proc_ctx):
+    """LOGIO_BATCH=adaptive (the CI cell's knob) resolves at the engine
+    and rides the bootstrap into worker processes."""
+    os.environ["LOGIO_BATCH"] = "adaptive"
+    try:
+        build, expected = linear_pipeline(n_events=64, window=4,
+                                          sink_target=16)
+        eng = Engine(build(), mode="process", store=_mk("memory"),
+                     transport="routed", ctx=proc_ctx, restart_delay=0.02)
+        assert eng.batching == "adaptive"
+        eng.start()
+        ok = eng.wait(60)
+        eng.stop()
+        assert ok
+        assert sink_outputs(eng) == expected
+        detail = eng.op_stats_detail()
+        assert any(s.get("batched_events", 0) > 0 for s in detail.values())
+    finally:
+        os.environ.pop("LOGIO_BATCH", None)
