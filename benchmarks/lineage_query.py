@@ -30,6 +30,7 @@ from repro.core import (CountWindowOperator, Engine, GeneratorSource,
                         LineageFilter, LineageQuery, LineageScope,
                         MapOperator, Pipeline, ReadSource, TerminalSink)
 from repro.core.logstore import StoreConfig, build_store
+from repro.core.metrics import store_metrics_from_backend
 
 WINDOW = 4
 
@@ -128,10 +129,10 @@ def sweep(rows_per_backend: int = 2000, queries: int = 50, repeats: int = 2,
         # ---- no-full-scan assertions on the scan counters ---------------
         store.reset_query_stats()
         qs[True].backward(("win", "out", n_wins // 2), where=flt)
-        pushed = store.query_stats()["rows_scanned"]
+        pushed = store_metrics_from_backend(store).rows_scanned
         store.reset_query_stats()
         qs[False].backward(("win", "out", n_wins // 2), where=flt)
-        scanned = store.query_stats()["rows_scanned"]
+        scanned = store_metrics_from_backend(store).rows_scanned
         assert pushed < scanned / 10, (
             f"{bname}: filtered backward scanned {pushed} rows with "
             f"pushdown vs {scanned} without — the index is not being used")

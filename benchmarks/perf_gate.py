@@ -32,7 +32,8 @@ from typing import Dict, Optional
 
 BENCH_FILES = ("BENCH_pipeline.json", "BENCH_process.json",
                "BENCH_transport.json", "BENCH_logstore.json",
-               "BENCH_lineage.json", "BENCH_batching.json")
+               "BENCH_lineage.json", "BENCH_batching.json",
+               "BENCH_controller.json")
 
 
 def _find(root: Path, fname: str) -> Optional[Path]:

@@ -97,22 +97,23 @@ def recovery_latency(rows, *, n_events: int,
     eng.start()
     # let the pipeline reach steady state, then kill the straggler's pod
     warmup_deadline = time.time() + 120.0
-    while eng.process_stats().get("OP3", 0) < n_events // 8:
+    while eng.metrics().op("OP3").processed < n_events // 8:
         if time.time() > warmup_deadline:
             eng.stop()
             raise TimeoutError("OP3 never reached steady state")
         time.sleep(0.01)
-    at_kill = eng.process_stats()
+    at_kill = eng.metrics()
     t_kill = time.time()
     eng.kill_group("OP3")
     # poll until OP3 processes events again (restart + rollback recovery)
     recovered_at = None
     src_during = 0
     while time.time() - t_kill < 60.0:
-        stats = eng.process_stats()
-        if stats.get("OP3", 0) > at_kill.get("OP3", 0):
+        m = eng.metrics()
+        if m.op("OP3").processed > at_kill.op("OP3").processed:
             recovered_at = time.time()
-            src_during = stats.get("OP1", 0) - at_kill.get("OP1", 0)
+            src_during = (m.op("OP1").processed
+                          - at_kill.op("OP1").processed)
             break
         time.sleep(0.005)
     ok = eng.wait(300.0)
@@ -189,7 +190,7 @@ def backpressure_sweep(rows, *, quick: bool = False,
             dt = time.time() - t0
             stop.set()
             wt.join(timeout=5.0)
-            ws = eng.wire_stats()
+            tm = eng.metrics().transport
             eng.stop()
             if not ok:
                 raise TimeoutError(
@@ -198,15 +199,15 @@ def backpressure_sweep(rows, *, quick: bool = False,
                     ("peak_sup_buffered", float(peak[0]), peak[0]),
                     ("peak_sup_rss_delta_kb", float(rss_peak[0] - rss0),
                      rss_peak[0] - rss0)]
-            if ws:
+            if tm.frames:
                 # batching quality on the byte transports: how many events
                 # ride each superframe, how many acks each control frame
                 # coalesces, and the total wire volume
-                epf = ws.get("events_per_frame", 0.0)
-                apc = ws.get("ctrl_per_ctrl_frame", 0.0)
-                cols += [("wire_frames", float(ws["frames"]), ws["frames"]),
-                         ("wire_kb", ws["bytes"] / 1024.0,
-                          round(ws["bytes"] / 1024.0, 1)),
+                epf = tm.events_per_frame
+                apc = tm.ctrl_per_ctrl_frame
+                cols += [("wire_frames", float(tm.frames), tm.frames),
+                         ("wire_kb", tm.bytes / 1024.0,
+                          round(tm.bytes / 1024.0, 1)),
                          ("events_per_frame", epf, round(epf, 2)),
                          ("acks_per_ctrl_frame", apc, round(apc, 2))]
             for suffix, us, derived in cols:

@@ -29,7 +29,7 @@ def main():
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--only", default=None,
                     help="comma list: uc1,uc2,uc3,lineage,lineage_query,"
-                         "logstore,batching,process,roofline")
+                         "logstore,batching,controller,process,roofline")
     ap.add_argument("--json", default=None,
                     help="also write the collected rows as JSON "
                          "(per-commit perf-trajectory artifact)")
@@ -37,9 +37,9 @@ def main():
     repeats = args.repeats or (3 if args.full else (1 if args.quick else 2))
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (batching, lineage_overhead, lineage_query,
-                            logstore_throughput, process_mode, roofline,
-                            uc1, uc2, uc3)
+    from benchmarks import (batching, controller, lineage_overhead,
+                            lineage_query, logstore_throughput, process_mode,
+                            roofline, uc1, uc2, uc3)
     rows = []
     print("name,us_per_call,derived")
     for name, mod in (("uc1", uc1), ("uc2", uc2), ("uc3", uc3),
@@ -47,6 +47,7 @@ def main():
                       ("lineage_query", lineage_query),
                       ("logstore", logstore_throughput),
                       ("batching", batching),
+                      ("controller", controller),
                       ("process", process_mode), ("roofline", roofline)):
         if only and name not in only:
             continue

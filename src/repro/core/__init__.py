@@ -10,6 +10,9 @@ from repro.core.api import LogioAPI
 from repro.core.builtin import (CountWindowOperator, GeneratorSource,
                                 MapOperator, SyncJoinOperator, TerminalSink)
 from repro.core.cluster import LocalCluster
+from repro.core.controller import ControllerConfig, RecoveryController
+from repro.core.metrics import (MetricsSnapshot, OpMetrics, StoreMetrics,
+                                TransportMetrics)
 from repro.core.engine import Engine, FailureInjector, Pipeline, \
     TransportConfig
 from repro.core.transport import Channel, ChannelClosed
@@ -27,6 +30,7 @@ from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
 from repro.core.replay import ReplayMismatch, ReplayReport
 
 __all__ = [
+    "ControllerConfig",
     "Engine",
     "EventKey",
     "LineageFilter",
@@ -34,6 +38,8 @@ __all__ = [
     "LineageScope",
     "LocalCluster",
     "LogioAPI",
+    "MetricsSnapshot",
+    "OpMetrics",
     "Pipeline",
     "Placement",
     "StoreConfig",

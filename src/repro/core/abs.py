@@ -105,8 +105,20 @@ class _AbsOpState:
 
 
 class AbsEngineDriver:
+    """Every group runs in epoch mode under this driver — the barrier
+    aligns the whole pipeline, so per-group ``recovery_mode`` freedom does
+    not exist here.  ``Engine.recovery_mode_of()`` reports ``"epoch"`` for
+    all groups under ``protocol="abs"``, and the engine rejects an explicit
+    ``recovery_modes={...: "log"}`` request at construction; the adaptive
+    per-group hybrid lives in the log engine (``recovery_modes=`` /
+    ``set_recovery_mode``, driven by ``repro.core.controller``)."""
+
     def __init__(self, engine, *, epoch_events: int = 15,
                  snapshot_async: bool = True, durable_store=None):
+        if any(m == "log" for m in engine.recovery_modes.values()):
+            raise ValueError(
+                "ABS cannot honor per-group recovery_mode 'log' — the "
+                "barrier aligns every group")
         self.e = engine
         self.epoch_events = epoch_events
         self.snapshot_async = snapshot_async
@@ -121,6 +133,12 @@ class AbsEngineDriver:
         self.snapshot_threads: List[threading.Thread] = []
         self._next_commit = 1
         self._tl = threading.local()
+        # group threads inside a step section; a global restart must see
+        # this reach zero before restoring, or an old-generation thread
+        # (e.g. the sink draining pre-crash outputs, or a source mid-emit)
+        # races the restore and pollutes the WAL/offsets it just rebuilt
+        self._active = 0
+        self._active_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def start(self):
@@ -150,12 +168,21 @@ class AbsEngineDriver:
         self._tl.gen = gen
         try:
             while not self._stop.is_set() and not self._done.is_set():
-                if gen != self._generation:
-                    return      # superseded by a restart
                 progressed = False
-                for op_id in self.e.group_ops(group):
-                    op = self.e.ops[op_id]
-                    progressed |= self._step(op)
+                with self._active_lock:
+                    self._active += 1
+                try:
+                    # the generation re-check sits INSIDE the active
+                    # section: entering after a restart observed zero is
+                    # harmless because such a thread exits without stepping
+                    if gen != self._generation:
+                        return      # superseded by a restart
+                    for op_id in self.e.group_ops(group):
+                        op = self.e.ops[op_id]
+                        progressed |= self._step(op)
+                finally:
+                    with self._active_lock:
+                        self._active -= 1
                 if not progressed:
                     time.sleep(0.001)
         except SimulatedCrash as exc:
@@ -211,8 +238,9 @@ class AbsEngineDriver:
                 self._emit_marker(op)
                 op._final_marker = True
             return False
-        if op.rate > 0:
-            time.sleep(op.rate)
+        delay = op.rate_fn(off) if op.rate_fn is not None else op.rate
+        if delay > 0:
+            time.sleep(delay)
         self.e.injector(op.id, "abs_source")
         body = op._effect[off]
         op._abs_offset = off + 1
@@ -301,7 +329,20 @@ class AbsEngineDriver:
             self.e.failures += 1
             self._generation += 1
             gen = self._generation
-            # stop all groups: they observe generation change and exit
+            # quiesce: every other group thread must leave its step section
+            # before state is restored (they observe the generation bump at
+            # their loop top; a blocked channel put aborts via stop_flag).
+            # The crashing thread itself already unwound out of its step.
+            deadline = time.time() + 30.0
+            while time.time() < deadline:
+                with self._active_lock:
+                    if self._active == 0:
+                        break
+                time.sleep(0.001)
+            for t in list(self.snapshot_threads):
+                t.join(timeout=5.0)
+            self.snapshot_threads = [t for t in self.snapshot_threads
+                                     if t.is_alive()]
             time.sleep(self.e.restart_delay * len(self.e.ops))  # whole-pipeline restart
             epoch = self.store.last_complete()
             for ch in self.e.channels:

@@ -117,6 +117,9 @@ class BatchGovernor:
         return time.monotonic()
 
     def stats(self) -> dict:
+        """Point-in-time counters as a FRESH dict each call — callers own
+        the result and may mutate it freely without corrupting governor
+        state (``Engine.metrics()`` folds these into ``OpMetrics``)."""
         return {"mode": str(self.mode), "runs": self.runs,
                 "events": self.events, "max_run": self.max_run,
                 "ev_cost": self._ev_cost}

@@ -59,11 +59,16 @@ class GeneratorSource(Operator):
 
     def __init__(self, op_id: str, source: ReadSource, *, conn_id: str = "Cx",
                  rate: float = 0.0, desc: str = "read A",
-                 processing_time: float = 0.0):
+                 processing_time: float = 0.0, rate_fn=None):
         super().__init__(op_id, processing_time=processing_time)
         self.source = source
         self.conn_id = conn_id
         self.rate = rate
+        # optional shaped arrival process: a picklable callable
+        # ``offset -> delay_seconds`` evaluated per emission (diurnal,
+        # burst, ... synthetic traces for the adaptive controller) —
+        # overrides the constant ``rate`` when set
+        self.rate_fn = rate_fn
         self.desc = desc
         self.exhausted = False
         self._effect: Optional[List[Any]] = None
@@ -106,8 +111,9 @@ class GeneratorSource(Operator):
             if not self.exhausted:
                 self._finish()
             return False
-        if self.rate > 0:
-            time.sleep(self.rate)
+        delay = self.rate_fn(off) if self.rate_fn is not None else self.rate
+        if delay > 0:
+            time.sleep(delay)
         body = self._effect[off]
         rt.ctx.read_offset = off + 1
         rt.crash_point(self.id, "source_pre_log")
@@ -117,10 +123,23 @@ class GeneratorSource(Operator):
     def pending_emits(self) -> int:
         """How much unemitted input the governor may batch over.  Rate-
         limited sources report 1 (each emission waits out its interval, so
-        batching would distort the arrival process)."""
+        batching would distort the arrival process).  A shaped source
+        (``rate_fn``) reports the length of the zero-delay *pack* behind
+        the next arrival: those events land together, so batching them
+        does not distort the arrival process."""
         if self._effect is None or self.rate > 0:
             return 1
-        return max(0, len(self._effect) - self.runtime.ctx.read_offset)
+        off = self.runtime.ctx.read_offset
+        end = len(self._effect)
+        if self.rate_fn is not None:
+            if off >= end:
+                return 0
+            k = 1
+            while off + k < end and k < 1024 \
+                    and self.rate_fn(off + k) <= 0:
+                k += 1
+            return k
+        return max(0, end - off)
 
     def step_run(self, max_n: int) -> int:
         """Emit up to ``max_n`` output events through ONE log transaction
@@ -134,7 +153,18 @@ class GeneratorSource(Operator):
             self.start_read()
         off = rt.ctx.read_offset
         n = min(max_n, len(self._effect) - off)
-        if n <= 1 or self.rate > 0:
+        if self.rate_fn is not None and n >= 1:
+            # shaped arrivals: wait out the pack boundary once, then emit
+            # the zero-delay arrivals behind it as one run — never run
+            # past the next nonzero delay (that is the next pack)
+            k = 1
+            while k < n and self.rate_fn(off + k) <= 0:
+                k += 1
+            n = k
+            delay = self.rate_fn(off)
+            if delay > 0:
+                time.sleep(delay)
+        elif n <= 1 or self.rate > 0:
             return 1 if self.step() else 0
         bodies = self._effect[off:off + n]
         rt.ctx.read_offset = off + n

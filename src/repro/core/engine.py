@@ -28,8 +28,10 @@ import collections
 import dataclasses
 import multiprocessing
 import os
+import pickle
 import threading
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.batching import make_governor, resolve_batching
@@ -40,6 +42,7 @@ from repro.core.transport.base import (Placement, WorkerBootstrap,
 from repro.core.lineage import LineageScope, enabled_ports
 from repro.core.logstore import (LogBackend, MemoryLogStore, StoreConfig,
                                  build_store)
+from repro.core.metrics import MetricsSnapshot, build_snapshot
 from repro.core.operator import (ExternalSystem, Operator, OperatorRuntime,
                                  SimulatedCrash)
 from repro.core.recovery import recover_operator
@@ -90,19 +93,37 @@ class TransportConfig:
 
 
 class FailureInjector:
-    """Crash the pipeline at precise points.
+    """Crash — or stall — the pipeline at precise points.
 
     plan entries: (op_id, point, nth) — raise SimulatedCrash the nth time
     ``crash_point(op_id, point)`` fires (1-based). point="*" matches any.
+
+    stall entries: (op_id, point, nth_lo, nth_hi, seconds) — sleep
+    ``seconds`` at every firing whose per-point count falls in
+    [nth_lo, nth_hi] (inclusive).  This is the straggler generator for the
+    adaptive-controller traces: the operator stays alive but its service
+    time balloons for a window of events.
     """
 
-    def __init__(self, plan: Sequence[Tuple[str, str, int]] = ()):
+    def __init__(self, plan: Sequence[Tuple[str, str, int]] = (),
+                 stalls: Sequence[Tuple[str, str, int, int, float]] = ()):
         self.plan = list(plan)
+        self.stalls = list(stalls)
         self.counts: Dict[Tuple[str, str], int] = collections.defaultdict(int)
         self.fired: List[Tuple[str, str, int]] = []
+        self.stalled: int = 0
         self.lock = threading.Lock()
 
+    def stall_active(self, op_id: str, point: str) -> bool:
+        """True while a stall window for (op_id, point) has firings left —
+        the controller tests use this to know when the straggler clears."""
+        with self.lock:
+            n = self.counts[(op_id, point)]
+            return any(o == op_id and p == point and n < hi
+                       for o, p, _lo, hi, _s in self.stalls)
+
     def __call__(self, op_id: str, point: str):
+        delay = 0.0
         with self.lock:
             # two plain counters per operator: hits of this exact point, and
             # hits of any point (what "*" plan entries count against)
@@ -110,6 +131,14 @@ class FailureInjector:
             self.counts[(op_id, "*")] += 1
             n_point = self.counts[(op_id, point)]
             n_any = self.counts[(op_id, "*")]
+            for (o, p, lo, hi, sec) in self.stalls:
+                if o != op_id:
+                    continue
+                n = n_point if p == point else \
+                    (n_any if p == "*" else None)
+                if n is not None and lo <= n <= hi:
+                    delay = max(delay, sec)
+                    self.stalled += 1
             for i, (o, p, nth) in enumerate(self.plan):
                 if o != op_id:
                     continue
@@ -117,6 +146,8 @@ class FailureInjector:
                     self.fired.append((o, p, nth))
                     del self.plan[i]
                     raise SimulatedCrash(f"{op_id}@{point}#{nth}")
+        if delay > 0:
+            time.sleep(delay)
 
 
 class Pipeline:
@@ -166,7 +197,9 @@ class Engine:
                  replay_ops: Sequence[str] = (),
                  abs_options: Optional[dict] = None,
                  batching: Optional[Any] = None,
-                 resume: bool = False):
+                 resume: bool = False,
+                 recovery_modes: Optional[Dict[str, str]] = None,
+                 epoch_interval: int = 16):
         """``store`` is any :class:`LogBackend`, a typed
         :class:`~repro.core.logstore.StoreConfig`, or a ``build_store``
         spec string like ``"memory+sharded+group"``. ``resume=True`` starts
@@ -261,6 +294,49 @@ class Engine:
         # through the bootstrap payload. See docs/batching.md.
         self.batching = resolve_batching(batching)
 
+        # per-group recovery mode: "log" (per-event LOG.io logging, the
+        # default) or "epoch" (interval state snapshotting on the same
+        # log — the ABS-style amortization) — the adaptive controller's
+        # actuator (repro.core.controller).  The mode recorded in the log
+        # is authoritative across restarts: a resumed engine overrides the
+        # constructor argument with what the log says.
+        self.epoch_interval = int(epoch_interval)
+        if self.epoch_interval < 2:
+            raise ValueError(f"epoch_interval must be >= 2, "
+                             f"got {epoch_interval!r}")
+        all_groups = set(pipeline.groups.values())
+        self.recovery_modes: Dict[str, str] = {}   # epoch groups only
+        self._mode_stale: set = set()   # groups whose snapshot may trail
+        for g, m in (recovery_modes or {}).items():
+            if g not in all_groups:
+                raise ValueError(f"recovery_modes names unknown group {g!r} "
+                                 f"(have {sorted(all_groups)})")
+            if m not in ("log", "epoch"):
+                raise ValueError(f"unknown recovery mode {m!r} for group "
+                                 f"{g!r} (expected 'log' or 'epoch')")
+            if m == "log" and protocol == "abs":
+                raise ValueError(
+                    "recovery_mode 'log' cannot be mixed with "
+                    "protocol='abs' (the ABS barrier aligns every group)")
+            if m == "epoch":
+                self.recovery_modes[g] = m
+        persisted = {g: self._load_mode(g) for g in all_groups}
+        for g, rec in persisted.items():
+            if rec is None:
+                continue
+            if rec["mode"] == "epoch":
+                self.recovery_modes[g] = "epoch"
+            else:
+                self.recovery_modes.pop(g, None)
+            if rec.get("stale"):
+                self._mode_stale.add(g)
+        if protocol != "abs":
+            # record constructor-requested epoch modes up front: a crash
+            # before the first switch must already recover under them
+            for g in sorted(self.recovery_modes):
+                if persisted.get(g) is None:
+                    self._persist_mode(g, "epoch", stale=False)
+
         self._stop = threading.Event()
         self._done = threading.Event()
         self.ops: Dict[str, Operator] = {}
@@ -283,6 +359,89 @@ class Engine:
                 {s for s, _sp, d, _dp, _ in pipeline.connections
                  if d in self.replay_ops})
         self._build(first=True, restarted=resume)
+
+    # ------------------------------------------------------------------
+    # per-group recovery mode (the adaptive controller's actuator)
+    # ------------------------------------------------------------------
+    _MODE_KEY = "__mode__:{}"
+
+    def _load_mode(self, group: str) -> Optional[dict]:
+        blob = self.store.get_state(self._MODE_KEY.format(group))
+        return None if blob is None else pickle.loads(blob)
+
+    def _persist_mode(self, group: str, mode: str, *, stale: bool):
+        txn = self.store.begin()
+        txn.put_state(self._MODE_KEY.format(group), 0,
+                      pickle.dumps({"mode": mode, "stale": bool(stale)}))
+        txn.commit()
+
+    def recovery_mode_of(self, group: str) -> str:
+        if self.protocol == "abs":
+            return "epoch"   # the ABS barrier epoch-snapshots every group
+        return self.recovery_modes.get(group, "log")
+
+    def set_recovery_mode(self, group: str, mode: str):
+        """Switch ``group`` between ``"log"`` (per-event logging) and
+        ``"epoch"`` (interval snapshotting) at runtime.
+
+        The new mode is recorded in the log *before* it takes effect, so a
+        crash anywhere mid-switch recovers under the mode the log holds.
+        Leaving "epoch" persists fresh state snapshots (thread/step mode)
+        or marks the group's snapshots stale (process mode — the restarted
+        worker then recovers with the DONE-inclusive scan and re-bounds
+        itself).  Process-mode groups warm-restart to apply the switch;
+        thread-mode groups switch live under the operator locks."""
+        if mode not in ("log", "epoch"):
+            raise ValueError(f"unknown recovery mode {mode!r} "
+                             "(expected 'log' or 'epoch')")
+        if group not in set(self.pipeline.groups.values()):
+            raise ValueError(f"unknown group {group!r}")
+        if self.protocol == "abs":
+            raise ValueError("recovery modes are fixed under protocol='abs' "
+                             "(the ABS barrier aligns every group)")
+        with self._restart_lock:
+            cur = self.recovery_mode_of(group)
+            if cur == mode:
+                return
+            if self._proc is not None:
+                # persist first (authoritative across SIGKILL), then
+                # warm-restart the group so the worker rebuilds under it
+                self._persist_mode(group, mode, stale=(cur == "epoch"))
+                if mode == "epoch":
+                    self.recovery_modes[group] = "epoch"
+                else:
+                    self.recovery_modes.pop(group, None)
+                    self._mode_stale.add(group)
+                self._proc.stop_group(group)
+                self._proc.start_group(group, recover=True)
+                return
+            if mode == "log":
+                # leaving epoch: persist a fresh snapshot per op under its
+                # lock, so interval-1 recovery is re-bounded before the
+                # mode record flips
+                for op_id in self.group_ops(group):
+                    rt = self.runtimes.get(op_id)
+                    if rt is None:
+                        continue
+                    with rt.op_lock:
+                        txn = self.store.begin()
+                        txn.put_state(op_id, rt.new_state_id(),
+                                      rt._state_blob(),
+                                      keep_history=rt.keep_state_history)
+                        txn.commit()
+                        rt.state_interval = 1
+                        rt._since_state = 0
+                self._persist_mode(group, "log", stale=False)
+                self.recovery_modes.pop(group, None)
+                self._mode_stale.discard(group)
+            else:
+                self._persist_mode(group, "epoch", stale=False)
+                self.recovery_modes[group] = "epoch"
+                for op_id in self.group_ops(group):
+                    rt = self.runtimes.get(op_id)
+                    if rt is not None and not rt.keep_state_history:
+                        with rt.op_lock:
+                            rt.state_interval = self.epoch_interval
 
     # ------------------------------------------------------------------
     def _build(self, first: bool, only_group: Optional[str] = None,
@@ -311,6 +470,7 @@ class Engine:
                 for ch in op.in_channels.values():
                     ch.reset_pending()
             lin_in, lin_out = self._lineage_ports.get(op_id, (set(), set()))
+            g = self.pipeline.groups[op_id]
             self.runtimes[op_id] = OperatorRuntime(
                 op, self.store,
                 lineage_in=lin_in, lineage_out=lin_out,
@@ -319,6 +479,9 @@ class Engine:
                 stop_flag=self._stop.is_set,
                 replay_mode=op_id in self.replay_ops,
                 keep_state_history=bool(lin_out),
+                state_interval=(self.epoch_interval
+                                if self.recovery_modes.get(g) == "epoch"
+                                else 1),
             )
             self.runtimes[op_id].governor = make_governor(self.batching)
         for g in set(self.pipeline.groups.values()):
@@ -368,6 +531,9 @@ class Engine:
                            if o in self._lineage_ports},
             replay_ops=frozenset(self.replay_ops),
             batching=self.batching,
+            recovery={"modes": dict(self.recovery_modes),
+                      "stale": sorted(self._mode_stale),
+                      "interval": self.epoch_interval},
         )
 
     # ------------------------------------------------------------------
@@ -480,6 +646,14 @@ class Engine:
             if ev is not None:
                 rt.handle_input(port, ev)
                 progressed = True
+        if not progressed:
+            # an InSet can be left triggered with its channel already
+            # drained (the input's ack txn committed but the engine
+            # interleaved away before generation) — fire it here, since
+            # the idle detection counts queued triggers as live work
+            for inset in op.triggers():
+                rt.generate(inset)
+                progressed = True
         return progressed
 
     def _recover_op(self, op: Operator):
@@ -488,10 +662,13 @@ class Engine:
         replay_pred_ports = {dp for s, sp, d, dp, _ in
                              self.pipeline.connections
                              if d == op.id and s in self.replay_ops}
+        g = self.pipeline.groups[op.id]
         recover_operator(rt, is_source=is_source,
                          source_driver=GeneratorSource.driver
                          if is_source else None,
-                         replay_pred_ports=replay_pred_ports)
+                         replay_pred_ports=replay_pred_ports,
+                         include_done=(self.recovery_modes.get(g) == "epoch"
+                                       or g in self._mode_stale))
 
     def _replay_cascade(self, failed_group: str) -> List[str]:
         """Replay predecessors (transitively through replay ops) of the
@@ -536,34 +713,94 @@ class Engine:
             return False
         if any(op.has_pending() for op in self.ops.values()):
             return False
+        # a triggered-but-ungenerated InSet is live work even though its
+        # input already left the channel: the generation (and its sends)
+        # is still to come — without this, a slow generate on the final
+        # event races the idle double-check and the output lands in a
+        # channel whose consumer thread has already exited
+        if any(op.triggers() for op in list(self.ops.values())):
+            return False
         if any(rt._deferred for rt in list(self.runtimes.values())):
             return False    # effects still gated on the durability watermark
         return all(len(ch) == 0 for ch in self.channels)
 
-    def process_stats(self) -> Dict[str, int]:
-        """Cumulative per-operator processed-event counters (process mode:
-        aggregated across worker incarnations by the supervisor)."""
+    # ------------------------------------------------------------------
+    # the unified typed metrics plane (docs/metrics.md)
+    # ------------------------------------------------------------------
+    def metrics(self) -> MetricsSnapshot:
+        """One typed, coherent point-in-time view of the whole engine —
+        per-operator counters + queue-depth gauges, transport counters and
+        store scan effort — identical in thread, step and process mode.
+        The single supported stats surface; the legacy accessors below are
+        DeprecationWarning shims over it."""
+        groups = dict(self.pipeline.groups)
+        modes = {g: self.recovery_mode_of(g)
+                 for g in set(self.pipeline.groups.values())}
         if self._proc is not None:
-            return self._proc.op_stats()
-        return {op_id: rt.stats["events_in"] + rt.stats["events_out"]
-                for op_id, rt in self.runtimes.items()}
+            op_counters, qdepth, wire = self._proc.metrics_raw()
+        else:
+            op_counters: Dict[str, Dict[str, int]] = {}
+            qdepth: Dict[str, int] = {}
+            wire: Dict[str, float] = {}
+            for op_id, rt in list(self.runtimes.items()):
+                c = dict(rt.stats)
+                gov = rt.governor
+                if gov is not None:
+                    gs = gov.stats()
+                    c["gov_runs"] = gs["runs"]
+                    c["gov_events"] = gs["events"]
+                    c["gov_max_run"] = gs["max_run"]
+                op_counters[op_id] = c
+                op = self.ops.get(op_id)
+                if op is not None:
+                    qdepth[op_id] = sum(ch.unprocessed()
+                                        for ch in op.in_channels.values())
+        return build_snapshot(mode=self.mode, protocol=self.protocol,
+                              failures=self.failures, restarts=self.restarts,
+                              op_counters=op_counters, groups=groups,
+                              queue_depths=qdepth, wire=wire,
+                              store=self.store, recovery_modes=modes)
+
+    # -- deprecated accessors (shims over metrics()) --------------------
+    #: the legacy ``op_stats_detail`` dict keys (rt.stats shape)
+    _DETAIL_KEYS = ("events_in", "events_out", "txns", "recovered_resends",
+                    "recovered_inputs", "recovery_scan_batches",
+                    "batched_runs", "batched_events", "commit_us",
+                    "send_stall_us")
+
+    def process_stats(self) -> Dict[str, int]:
+        """Deprecated: use ``Engine.metrics()`` (``ops[op].processed``)."""
+        warnings.warn(
+            "Engine.process_stats() is deprecated; use Engine.metrics() — "
+            "MetricsSnapshot.ops[op].processed", DeprecationWarning,
+            stacklevel=2)
+        return {op: m.processed for op, m in self.metrics().ops.items()}
 
     def op_stats_detail(self) -> Dict[str, Dict[str, int]]:
-        """Full per-operator runtime counter dicts (txns, batched_runs,
-        recovery_scan_batches, ...; process mode: summed across worker
-        incarnations by the supervisor)."""
-        if self._proc is not None:
-            return self._proc.op_stats_detail()
-        return {op_id: dict(rt.stats)
-                for op_id, rt in self.runtimes.items()}
+        """Deprecated: use ``Engine.metrics()`` (``ops[op]`` fields)."""
+        warnings.warn(
+            "Engine.op_stats_detail() is deprecated; use Engine.metrics() "
+            "— MetricsSnapshot.ops[op] carries the same counters as typed "
+            "fields", DeprecationWarning, stacklevel=2)
+        return {op: {k: getattr(m, k) for k in self._DETAIL_KEYS}
+                for op, m in self.metrics().ops.items()}
 
     def wire_stats(self) -> Dict[str, float]:
-        """Wire-protocol counters (superframes, bytes, coalescing ratios)
-        aggregated across workers — byte transports in process mode only;
-        empty for ``local``/``routed``."""
-        if self._proc is not None:
-            return self._proc.wire_stats()
-        return {}
+        """Deprecated: use ``Engine.metrics()`` (``.transport``)."""
+        warnings.warn(
+            "Engine.wire_stats() is deprecated; use Engine.metrics() — "
+            "MetricsSnapshot.transport (TransportMetrics)",
+            DeprecationWarning, stacklevel=2)
+        t = self.metrics().transport
+        if not (t.frames or t.bytes or t.events or t.ctrl
+                or t.ctrl_frames or t.extra):
+            return {}
+        out: Dict[str, float] = {
+            "frames": t.frames, "bytes": t.bytes, "events": t.events,
+            "ctrl": t.ctrl, "ctrl_frames": t.ctrl_frames, **dict(t.extra)}
+        out["events_per_frame"] = t.events_per_frame
+        out["ctrl_per_ctrl_frame"] = t.ctrl_per_ctrl_frame
+        return out
 
     def wait(self, timeout: float = 60.0) -> bool:
         if self.protocol == "abs":

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import warnings
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.events import Event
@@ -292,8 +293,14 @@ class LogBackend(abc.ABC):
         """Alg 7 step 1: undone, sender==op, InSet null, real output events."""
 
     @abc.abstractmethod
-    def fetch_ack_events(self, op_id: str) -> List[Tuple[Event, str, str]]:
-        """Alg 9 step 2: undone, receiver==op, InSet assigned."""
+    def fetch_ack_events(self, op_id: str, include_done: bool = False
+                         ) -> List[Tuple[Event, str, str]]:
+        """Alg 9 step 2: undone, receiver==op, InSet assigned.
+
+        ``include_done`` additionally returns DONE rows — needed when the
+        receiver recovers from an epoch-mode (interval-snapshotted, hence
+        possibly stale) state snapshot and must replay the global-state
+        contributions of inputs it already completed."""
 
     @abc.abstractmethod
     def fetch_replay_outputs(self, op_id: str) -> List[Tuple[int, str, str]]:
@@ -437,6 +444,16 @@ class LogBackend(abc.ABC):
 
     # ---- query instrumentation ------------------------------------------
     def query_stats(self) -> Dict[str, int]:
+        """Deprecated public accessor — the typed metrics plane
+        (``Engine.metrics().store``) is the supported surface; backends
+        implement ``_query_stats``."""
+        warnings.warn(
+            "LogBackend.query_stats() is deprecated; read "
+            "Engine.metrics().store (repro.core.metrics.StoreMetrics) "
+            "instead", DeprecationWarning, stacklevel=2)
+        return self._query_stats()
+
+    def _query_stats(self) -> Dict[str, int]:
         """Scan-effort counters for the lineage query paths (rows_scanned /
         rows_returned, plus backend-specific keys such as segment skip
         counts). Purely diagnostic — the pushdown benchmark and tests assert

@@ -323,8 +323,8 @@ class GroupCommitStore(LogBackend):
     def fetch_resend_events(self, op_id):
         return self.view.fetch_resend_events(op_id)
 
-    def fetch_ack_events(self, op_id):
-        return self.view.fetch_ack_events(op_id)
+    def fetch_ack_events(self, op_id, include_done=False):
+        return self.view.fetch_ack_events(op_id, include_done=include_done)
 
     def fetch_replay_outputs(self, op_id):
         return self.view.fetch_replay_outputs(op_id)
@@ -395,8 +395,8 @@ class GroupCommitStore(LogBackend):
     def get_event_payload(self, event_key):
         return self.view.get_event_payload(event_key)
 
-    def query_stats(self):
-        return self.view.query_stats()
+    def _query_stats(self):
+        return self.view._query_stats()
 
     def reset_query_stats(self):
         self.view.reset_query_stats()

@@ -334,12 +334,15 @@ class MemoryLogStore(LogBackend):
             rows.sort(key=lambda kr: kr[0][2])
             return [(self._mk_event(k, r), r["status"]) for k, r in rows]
 
-    def fetch_ack_events(self, op_id: str) -> List[Tuple[Event, str, str]]:
+    def fetch_ack_events(self, op_id: str, include_done: bool = False
+                         ) -> List[Tuple[Event, str, str]]:
         """Returns [(event, inset_id, status)] ordered by (rec_port,
         event_id)."""
+        statuses = (UNDONE, REPLAY, DONE) if include_done \
+            else (UNDONE, REPLAY)
         with self.lock:
             rows = [(k, r) for k, r in self.event_log.items()
-                    if r["rec_op"] == op_id and r["status"] in (UNDONE, REPLAY)
+                    if r["rec_op"] == op_id and r["status"] in statuses
                     and k[4] is not None]
             rows.sort(key=lambda kr: (kr[1]["rec_port"] or "", kr[0][2]))
             return [(self._mk_event(k, r), k[4], r["status"])
@@ -555,7 +558,7 @@ class MemoryLogStore(LogBackend):
                 return None
             return self._load_blob(blob)
 
-    def query_stats(self) -> Dict[str, int]:
+    def _query_stats(self) -> Dict[str, int]:
         with self.lock:
             return dict(self._qstats)
 

@@ -443,8 +443,9 @@ class ShardedLogStore(LogBackend):
 
     # ---- queries ---------------------------------------------------------
     # receiver-/owner-homed: answered by one shard
-    def fetch_ack_events(self, op_id):
-        return self._shard(op_id).fetch_ack_events(op_id)
+    def fetch_ack_events(self, op_id, include_done=False):
+        return self._shard(op_id).fetch_ack_events(
+            op_id, include_done=include_done)
 
     def last_acked(self, op_id):
         return self._shard(op_id).last_acked(op_id)
@@ -520,10 +521,10 @@ class ShardedLogStore(LogBackend):
                 return payload
         return None
 
-    def query_stats(self):
+    def _query_stats(self):
         out: Dict[str, int] = {}
         for s in self.shards:
-            for k, v in s.query_stats().items():
+            for k, v in s._query_stats().items():
                 out[k] = out.get(k, 0) + v
         return out
 

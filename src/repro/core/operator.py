@@ -187,11 +187,21 @@ class OperatorRuntime:
                  crash_point: Callable[[str, str], None] = lambda op, pt: None,
                  stop_flag: Callable[[], bool] = lambda: False,
                  replay_mode: bool = False,
-                 keep_state_history: bool = False):
+                 keep_state_history: bool = False,
+                 state_interval: int = 1):
         self.op = op
         op.runtime = self
         self.store = store
         self.ctx = LogioContext(op)
+        # "epoch" recovery mode: snapshot state every N generate txns
+        # instead of every txn (ABS-style amortization on the LOG.io log).
+        # Lineage-scoped ops pin to 1 — their per-InSet state history IS
+        # the lineage record.  Transactions carrying write actions always
+        # snapshot regardless (write SSNs have no log-scan recovery floor,
+        # so a stale write_ssn would reissue colliding write event ids).
+        self.state_interval = 1 if keep_state_history \
+            else max(1, int(state_interval))
+        self._since_state = 0
         self.lineage_in = set(lineage_in)
         self.lineage_out = set(lineage_out)
         self.external = external or ExternalSystem()
@@ -210,7 +220,11 @@ class OperatorRuntime:
                       "recovery_scan_batches": 0,
                       # micro-batched hot path (runs of >1 event applied
                       # through one vectored transaction)
-                      "batched_runs": 0, "batched_events": 0}
+                      "batched_runs": 0, "batched_events": 0,
+                      # metrics-plane latency accounting (cumulative µs):
+                      # time inside store commits / blocked in credit-gated
+                      # channel puts — the controller's mode signals
+                      "commit_us": 0, "send_stall_us": 0}
         #: optional :class:`repro.core.batching.BatchGovernor`; set by the
         #: engine/worker when micro-batching is enabled for this operator
         self.governor = None
@@ -301,6 +315,15 @@ class OperatorRuntime:
                 self.ctx.last_acked[port] = max(
                     self.ctx.last_acked[port], last)
 
+    def _commit(self, txn):
+        """Commit with latency accounting (``commit_us`` feeds the
+        adaptive controller's commit-share signal)."""
+        t0 = time.perf_counter()
+        try:
+            return txn.commit()
+        finally:
+            self.stats["commit_us"] += int((time.perf_counter() - t0) * 1e6)
+
     # ---- normal processing: one input event (Algorithm 2) ----------------
     def handle_input(self, port: str, ev: Event) -> bool:
         """Peeked event at head of channel. Returns True if consumed."""
@@ -337,7 +360,7 @@ class OperatorRuntime:
         txn.assign_insets((ev.send_op, ev.send_port, ev.event_id), insets,
                           rec_op=self.op.id)
         try:
-            token = txn.commit()
+            token = self._commit(txn)
         except TxnAborted:
             # the event was reassigned away (scale-down, Alg 13): drop it
             ch.ack()
@@ -419,7 +442,7 @@ class OperatorRuntime:
                 txn.assign_insets((ev.send_op, ev.send_port, ev.event_id),
                                   insets, rec_op=op.id)
             try:
-                token = txn.commit()
+                token = self._commit(txn)
             except TxnAborted:
                 # some event was reassigned away (Alg 13): fall back to
                 # per-event commits, reusing the phase-1 state updates
@@ -476,7 +499,7 @@ class OperatorRuntime:
             txn.assign_insets((ev.send_op, ev.send_port, ev.event_id),
                               insets, rec_op=op.id)
             try:
-                token = txn.commit()
+                token = self._commit(txn)
             except TxnAborted:
                 ch.ack()
                 consumed += 1
@@ -516,7 +539,7 @@ class OperatorRuntime:
         txn = self.store.begin()
         txn.set_status((ev.send_op, ev.send_port, ev.event_id), UNDONE,
                        rec_op=self.op.id)
-        token = txn.commit()
+        token = self._commit(txn)
         if ev.event_id > self.ctx.global_updated.get(port, -1):
             op.update_global(ev)
             self.ctx.global_updated[port] = ev.event_id
@@ -560,7 +583,13 @@ class OperatorRuntime:
         # segment/WAL append and one routing decision per run in the
         # sharded store); single-output transactions keep the scalar op
         # sequence byte-identical to the per-event path
-        sid = self.new_state_id()
+        # "epoch" recovery mode skips the per-txn snapshot between
+        # intervals; recovery then replays from the last snapshot with
+        # DONE rows included (see recovery.recover_operator).  Write
+        # actions always force a snapshot — stale write SSNs have no
+        # recovery floor.
+        snap_state = (self.state_interval <= 1 or bool(write_events)
+                      or self._since_state + 1 >= self.state_interval)
         txn = self.store.begin()
         log_entries: List[Tuple[Event, str, Optional[str]]] = []
         data_events: List[Event] = []
@@ -589,8 +618,9 @@ class OperatorRuntime:
         for w in write_events:
             txn.log_event(w, UNDONE)
             txn.put_event_data(w)
-        txn.put_state(op.id, sid, self._state_blob(),
-                      keep_history=self.keep_state_history)
+        if snap_state:
+            txn.put_state(op.id, self.new_state_id(), self._state_blob(),
+                          keep_history=self.keep_state_history)
         txn.set_inset_status(op.id, inset_id, DONE, require_rows=True)
         if self.lineage_out:
             for ra, effect in self.pending_reads:
@@ -605,13 +635,14 @@ class OperatorRuntime:
                     txn.put_lineage(e.event_id, op.id, e.send_port, inset_id)
                     seen.add((e.send_port, e.event_id))
         try:
-            token = txn.commit()
+            token = self._commit(txn)
         except TxnAborted:
             # InSet vanished (scaled-down reassignment, Alg 13) — drop output
             for port, _ in outputs:
                 self.ctx.ssn[port] -= 1     # roll back the SSN we took
             return
         self.stats["txns"] += 1
+        self._since_state = 0 if snap_state else self._since_state + 1
         self.crash_point(op.id, "post_log")
         # Step 5: send — may pipeline ahead of durability (duplicates are
         # dropped by the receivers' obsolete filters on recovery)
@@ -662,7 +693,9 @@ class OperatorRuntime:
                                           body=body))
             runs.append((inset_id, out_events, write_events,
                          list(self.pending_reads)))
-        sid = self.new_state_id()
+        any_writes = any(r[2] for r in runs)
+        snap_state = (self.state_interval <= 1 or any_writes
+                      or self._since_state + len(runs) >= self.state_interval)
         txn = self.store.begin()
         log_entries: List[Tuple[Event, str, Optional[str]]] = []
         for inset_id, out_events, write_events, reads in runs:
@@ -697,10 +730,11 @@ class OperatorRuntime:
                         txn.put_lineage(e.event_id, op.id, e.send_port,
                                         inset_id)
                         seen.add((e.send_port, e.event_id))
-        txn.put_state(op.id, sid, self._state_blob(),
-                      keep_history=self.keep_state_history)
+        if snap_state:
+            txn.put_state(op.id, self.new_state_id(), self._state_blob(),
+                          keep_history=self.keep_state_history)
         try:
-            token = txn.commit()
+            token = self._commit(txn)
         except TxnAborted:
             # one of the InSets vanished under the whole-run transaction
             # (Alg 13): rewind the SSNs and fall back to scalar generates,
@@ -713,6 +747,8 @@ class OperatorRuntime:
                 self._generate_locked(inset_id)
             return
         self.stats["txns"] += 1
+        self._since_state = 0 if snap_state \
+            else self._since_state + len(runs)
         for inset_id, out_events, write_events, _ in runs:
             self.crash_point(op.id, "post_log")
             for e in out_events:
@@ -724,9 +760,13 @@ class OperatorRuntime:
             op.clear_inset(inset_id)
 
     def _send(self, e: Event):
+        t0 = time.perf_counter()
         for ch in self.op.out_channels.get(e.send_port, []):
             if ch.rec_op == e.rec_op and ch.rec_port == e.rec_port:
                 ch.put(e, stop_flag=self.stop_flag)
+        # time blocked against the credit window (back-pressure from a
+        # slow downstream) — the controller's stall-share signal
+        self.stats["send_stall_us"] += int((time.perf_counter() - t0) * 1e6)
 
     # ---- side-effect reads (Algorithm 4) ----------------------------------
     def read_action(self, conn_id: str, desc: str, source: ReadSource):

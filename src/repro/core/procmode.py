@@ -153,8 +153,8 @@ class StoreClient(LogBackend):
     def fetch_resend_events(self, op_id):
         return self._q("fetch_resend_events", op_id)
 
-    def fetch_ack_events(self, op_id):
-        return self._q("fetch_ack_events", op_id)
+    def fetch_ack_events(self, op_id, include_done=False):
+        return self._q("fetch_ack_events", op_id, include_done)
 
     def fetch_replay_outputs(self, op_id):
         return self._q("fetch_replay_outputs", op_id)
@@ -276,15 +276,25 @@ def _worker_main(bootstrap: WorkerBootstrap, rpc_conn, tr_conn):
                 op.out_channels.setdefault(ch.send_port, []).append(ch)
         lin_in, lin_out = bootstrap.lineage_ports.get(op_id, (set(), set()))
         ops[op_id] = op
+        rec_info = bootstrap.recovery or {}
+        group_mode = rec_info.get("modes", {}).get(group, "log")
         runtimes[op_id] = OperatorRuntime(
             op, store, lineage_in=lin_in, lineage_out=lin_out,
             external=external, crash_point=injector,
             stop_flag=lambda: wt.stopped,
             replay_mode=op_id in bootstrap.replay_ops,
-            keep_state_history=bool(lin_out))
+            keep_state_history=bool(lin_out),
+            state_interval=(rec_info.get("interval", 16)
+                            if group_mode == "epoch" else 1))
         runtimes[op_id].governor = make_governor(bootstrap.batching)
 
     if recover:
+        rec_info = bootstrap.recovery or {}
+        # epoch groups (and groups freshly switched off epoch, marked
+        # stale) recover from a possibly-interval-stale snapshot: include
+        # DONE rows so completed inputs' global contributions replay
+        include_done = (rec_info.get("modes", {}).get(group) == "epoch"
+                        or group in rec_info.get("stale", ()))
         for op_id in group_ops:
             op = ops[op_id]
             is_source = isinstance(op, GeneratorSource)
@@ -294,7 +304,8 @@ def _worker_main(bootstrap: WorkerBootstrap, rpc_conn, tr_conn):
             recover_operator(runtimes[op_id], is_source=is_source,
                              source_driver=GeneratorSource.driver
                              if is_source else None,
-                             replay_pred_ports=replay_pred_ports)
+                             replay_pred_ports=replay_pred_ports,
+                             include_done=include_done)
 
     sources = [op for op in ops.values() if isinstance(op, GeneratorSource)]
     last_stats = 0.0
@@ -335,7 +346,21 @@ def _worker_main(bootstrap: WorkerBootstrap, rpc_conn, tr_conn):
         return progressed
 
     def send_stats():
-        wt.send_stats({o: dict(runtimes[o].stats) for o in group_ops})
+        out = {}
+        for o in group_ops:
+            c = dict(runtimes[o].stats)
+            gov = runtimes[o].governor
+            if gov is not None:
+                gs = gov.stats()
+                c["gov_runs"] = gs["runs"]
+                c["gov_events"] = gs["events"]
+                c["gov_max_run"] = gs["max_run"]
+            # "g_"-prefixed keys are live gauges of THIS incarnation: the
+            # supervisor keeps them out of the cumulative fold
+            c["g_queue_depth"] = sum(ch.unprocessed()
+                                     for ch in ops[o].in_channels.values())
+            out[o] = c
+        wt.send_stats(out)
 
     while True:
         wt.pump(0)
@@ -630,6 +655,10 @@ class ProcessEngineDriver:
         # same base/live split per group
         self._wire_base: Dict[str, Dict[str, int]] = {}
         self._wire_live: Dict[str, Dict[str, int]] = {}
+        # instantaneous gauges ("g_"-prefixed keys in worker stats, e.g.
+        # queue depth) — live-only: a dead incarnation's gauge is
+        # meaningless, so these are never folded into a base
+        self._op_gauge_live: Dict[str, Dict[str, Dict[str, int]]] = {}
         with self.lock:
             self.ch_by_name = {ch.name: ch for ch in self.e.channels}
         self.transport = make_supervisor_transport(engine.transport, self)
@@ -648,11 +677,18 @@ class ProcessEngineDriver:
         wire = stats.pop("__wire__", None)
         if wire is not None:
             self._wire_live[group] = dict(wire)
+        counters: Dict[str, Dict[str, int]] = {}
+        gauges: Dict[str, Dict[str, int]] = {}
+        for op, s in stats.items():
+            c = counters[op] = {}
+            g = gauges[op] = {}
+            for k, n in s.items():
+                (g if k.startswith("g_") else c)[k] = n
         self._op_stats_live[group] = {
             op: s.get("events_in", 0) + s.get("events_out", 0)
-            for op, s in stats.items()}
-        self._op_detail_live[group] = {op: dict(s)
-                                       for op, s in stats.items()}
+            for op, s in counters.items()}
+        self._op_detail_live[group] = counters
+        self._op_gauge_live[group] = gauges
 
     def pump_all(self):
         """Re-deliver/rebroadcast after a topology change (scaling)."""
@@ -983,7 +1019,11 @@ class ProcessEngineDriver:
         for op, s in self._op_detail_live.pop(group, {}).items():
             acc = dbase.setdefault(op, {})
             for k, n in s.items():
-                acc[k] = acc.get(k, 0) + n
+                if k == "gov_max_run":  # high-water mark, not a sum
+                    acc[k] = max(acc.get(k, 0), n)
+                else:
+                    acc[k] = acc.get(k, 0) + n
+        self._op_gauge_live.pop(group, None)
         wbase = self._wire_base.setdefault(group, {})
         for k, n in self._wire_live.pop(group, {}).items():
             wbase[k] = wbase.get(k, 0) + n
@@ -1031,6 +1071,34 @@ class ProcessEngineDriver:
                 out["ctrl_per_ctrl_frame"] = (out.get("ctrl", 0)
                                               / out["ctrl_frames"])
             return out
+
+    def metrics_raw(self):
+        """Raw material for ``Engine.metrics()``: per-op counter dicts
+        summed across incarnations (``gov_max_run`` is a high-water mark
+        and MAX-folds), per-op instantaneous queue depths from the live
+        gauges, and the summed wire counters without derived ratios."""
+        with self.lock:
+            counters: Dict[str, Dict[str, int]] = {}
+            for src in (self._op_detail_base, self._op_detail_live):
+                for g, ops in src.items():
+                    for op, s in ops.items():
+                        acc = counters.setdefault(op, {})
+                        for k, n in s.items():
+                            if k == "gov_max_run":
+                                acc[k] = max(acc.get(k, 0), n)
+                            else:
+                                acc[k] = acc.get(k, 0) + n
+            qdepth: Dict[str, int] = {}
+            for g, ops in self._op_gauge_live.items():
+                for op, gauges in ops.items():
+                    qdepth[op] = (qdepth.get(op, 0)
+                                  + int(gauges.get("g_queue_depth", 0)))
+            wire: Dict[str, float] = {}
+            for src in (self._wire_base, self._wire_live):
+                for g, w in src.items():
+                    for k, n in w.items():
+                        wire[k] = wire.get(k, 0) + n
+            return counters, qdepth, wire
 
     def wait(self, timeout: float) -> bool:
         deadline = time.time() + timeout

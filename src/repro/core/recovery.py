@@ -33,17 +33,27 @@ from __future__ import annotations
 
 from typing import Dict, Set, Tuple
 
-from repro.core.events import REPLAY, UNDONE
+from repro.core.events import DONE, REPLAY, UNDONE
 from repro.core.operator import OperatorRuntime
 
 
 def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
                      source_driver=None,
-                     replay_pred_ports: Set[str] = frozenset()):
+                     replay_pred_ports: Set[str] = frozenset(),
+                     include_done: bool = False):
     """Full recovery sequence for one restarted operator.
 
     replay_pred_ports: input ports whose senders are replay operators (their
     payloads are not in EVENT_DATA; regenerated events arrive via channels).
+
+    include_done: the operator's group runs (or recently ran) in "epoch"
+    recovery mode, so the restored snapshot may be up to ``state_interval``
+    generate-transactions stale.  The ack-events scan then includes DONE
+    rows: their global-state contributions replay through the
+    ``global_updated`` guard (triggers and event state are NOT rebuilt for
+    them — their Input Sets completed, regenerating would duplicate
+    outputs).  Recovery ends by persisting a fresh snapshot so the next
+    restart is re-bounded.
     """
     op = rt.op
     # Alg 9 step 1 / Alg 6 step 2: restore global state + context, advance SSNs
@@ -89,7 +99,8 @@ def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
     # their lineage.
     inset_prefix = op.id + ":"
     rt.stats["recovery_scan_batches"] += 1      # one ack-events range scan
-    ack_rows = list(rt.store.fetch_ack_events(op.id))
+    ack_rows = list(rt.store.fetch_ack_events(op.id,
+                                              include_done=include_done))
     for _ev, inset_id, _status in ack_rows:
         if inset_id and inset_id.startswith(inset_prefix):
             suffix = inset_id[len(inset_prefix):]
@@ -98,6 +109,13 @@ def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
     for ev, inset_id, status in ack_rows:
         rt.stats["recovered_inputs"] += 1
         port = ev.rec_port
+        if status == DONE:
+            # stale-snapshot catch-up only: the guard skips contributions
+            # the snapshot already holds
+            if ev.event_id > rt.ctx.global_updated.get(port, -1):
+                op.update_global(ev)
+                rt.ctx.global_updated[port] = ev.event_id
+            continue
         if port in replay_pred_ports and not rt.replay_mode:
             # Alg 11 step 3: payload unavailable — mark "replay" and await
             # the regenerated event from the replay predecessor.
@@ -124,6 +142,14 @@ def recover_operator(rt: OperatorRuntime, *, is_source: bool = False,
         for port, last in rt.store.last_sent_ssn(op.id).items():
             if port in rt.ctx.ssn:
                 rt.ctx.ssn[port] = max(rt.ctx.ssn[port], last + 1)
+    if include_done:
+        # the state just rebuilt is current — persist it so the next
+        # restart replays from here instead of re-scanning the DONE backlog
+        txn = rt.store.begin()
+        txn.put_state(op.id, rt.new_state_id(), rt._state_blob(),
+                      keep_history=rt.keep_state_history)
+        txn.commit()
+        rt._since_state = 0
     rt.crash_point(op.id, "recovery_post_processing")
     op.state = "running"
 

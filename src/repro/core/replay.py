@@ -211,9 +211,9 @@ def replay_from_log(engine, outputs, *, scope: Optional[LineageScope] = None,
         deterministic = all(
             getattr(engine.ops.get(op_id), "deterministic", True)
             for op_id in sl.ops)
-        stats = reng.process_stats()
-        executed = frozenset(op for op, n in stats.items()
-                             if n > 0 and not op.startswith("__replay"))
+        executed = frozenset(op for op, m in reng.metrics().ops.items()
+                             if m.processed > 0
+                             and not op.startswith("__replay"))
         report = ReplayReport(targets=sl.targets, slice=sl,
                               rederived=rederived, matches=matches,
                               executed_ops=executed,

@@ -176,6 +176,13 @@ class WorkerBootstrap:
     #: batching-governor spec for the group's receivers ("off" | "adaptive"
     #: | int); None defers to the LOGIO_BATCH env var in the worker
     batching: Optional[Any] = None
+    #: per-group recovery-mode payload: ``{"modes": {group: "epoch"},
+    #: "stale": [groups], "interval": N}`` — groups in "epoch" mode run
+    #: interval state snapshotting and recover with the DONE-inclusive
+    #: scan; "stale" marks groups freshly switched off epoch whose next
+    #: recovery must still include DONE rows.  None (old payloads) means
+    #: every group is in "log" mode.
+    recovery: Optional[Dict[str, Any]] = None
 
     @property
     def channels(self) -> List[ChannelSpec]:

@@ -209,13 +209,13 @@ def test_recovery_scan_batches_counter(store_spec):
                  store=_mk(store_spec))
     assert eng.run_to_completion()
     assert sink_outputs(eng) == expected
-    detail = eng.op_stats_detail()
-    win = detail["win"]
-    assert win["recovered_inputs"] > 0
-    assert win["recovery_scan_batches"] == 2       # one resend + one ack scan
-    for op, s in detail.items():
+    m = eng.metrics()
+    win = m.op("win")
+    assert win.recovered_inputs > 0
+    assert win.recovery_scan_batches == 2          # one resend + one ack scan
+    for op, s in m.ops.items():
         if op != "win":
-            assert s["recovery_scan_batches"] == 0
+            assert s.recovery_scan_batches == 0
 
 
 # ---------------------------------------------------------------------------
@@ -231,10 +231,9 @@ def test_batched_pipeline_exactly_once(batching, store_spec):
     assert eng.wait(30)
     eng.stop()
     assert sink_outputs(eng) == expected
-    detail = eng.op_stats_detail()
+    ops = eng.metrics().ops
     # saturation (rate=0): the governed operators actually formed runs
-    assert any(s.get("batched_events", 0) > 0 for s in detail.values()), \
-        detail
+    assert any(s.batched_events > 0 for s in ops.values()), ops
 
 
 def test_batched_pipeline_with_crash_thread_mode(store_spec):
@@ -290,10 +289,9 @@ def test_mid_batch_sigkill_exactly_once(op_id, point, nth, spec, transport,
     # replay length: at most one batch beyond the durability watermark
     # (plus the credit window of events that were legitimately in flight)
     bound = DEFAULT_MAX_BATCH + CHANNEL_CAPACITY
-    detail = eng.op_stats_detail()
-    for op, s in detail.items():
-        assert s.get("recovered_resends", 0) <= bound, (op, s)
-        assert s.get("recovered_inputs", 0) <= bound, (op, s)
+    for op, s in eng.metrics().ops.items():
+        assert s.recovered_resends <= bound, (op, s)
+        assert s.recovered_inputs <= bound, (op, s)
 
 
 def test_env_forced_governor_reaches_workers(proc_ctx):
@@ -311,7 +309,7 @@ def test_env_forced_governor_reaches_workers(proc_ctx):
         eng.stop()
         assert ok
         assert sink_outputs(eng) == expected
-        detail = eng.op_stats_detail()
-        assert any(s.get("batched_events", 0) > 0 for s in detail.values())
+        ops = eng.metrics().ops
+        assert any(s.batched_events > 0 for s in ops.values())
     finally:
         os.environ.pop("LOGIO_BATCH", None)

@@ -157,6 +157,7 @@ def test_api_surface_snapshot():
     # THE documented public surface (docs/api.md). A mismatch here means an
     # intentional API change: update the docs and this snapshot together.
     assert sorted(repro.core.__all__) == [
+        "ControllerConfig",
         "Engine",
         "EventKey",
         "LineageFilter",
@@ -164,6 +165,8 @@ def test_api_surface_snapshot():
         "LineageScope",
         "LocalCluster",
         "LogioAPI",
+        "MetricsSnapshot",
+        "OpMetrics",
         "Pipeline",
         "Placement",
         "StoreConfig",
@@ -214,3 +217,106 @@ def test_lineage_free_functions_shim_warns():
     # the shims delegate: identical answers to the typed facade
     assert old_bw == LineageQuery(store).backward(("b", "out", 0)).keys()
     assert old_fw == LineageQuery(store).forward(("a", "out", 0), "b").keys()
+
+
+# ---------------------------------------------------------------------------
+# ControllerConfig
+# ---------------------------------------------------------------------------
+
+def test_controller_config_round_trip():
+    from repro.core import ControllerConfig
+    cfg = ControllerConfig(slo_ms=50.0, switch_hysteresis=2, max_replicas=6)
+    assert ControllerConfig.parse(str(cfg)) == cfg
+    parsed = ControllerConfig.parse("slo_ms=50,switch_hysteresis=2,"
+                                    "max_replicas=6")
+    assert parsed == cfg
+    # overrides win over the spec
+    assert ControllerConfig.parse("slo_ms=50", slo_ms=75.0).slo_ms == 75.0
+
+
+@pytest.mark.parametrize("spec,match", [
+    ("", "non-empty string"),
+    (None, "non-empty string"),
+    ("slo_ms", "malformed controller spec"),
+    ("warp_factor=9", "unknown controller spec key"),
+    ("slo_ms=50,slo_ms=60", "duplicate controller spec key"),
+    ("slo_ms=fast", "bad value for controller spec key"),
+])
+def test_controller_config_malformed_specs_raise(spec, match):
+    from repro.core import ControllerConfig
+    with pytest.raises(ValueError, match=match):
+        ControllerConfig.parse(spec)
+
+
+@pytest.mark.parametrize("kw,match", [
+    ({"slo_ms": 0}, "slo_ms must be > 0"),
+    ({"sample_interval": 0}, "sample_interval must be > 0"),
+    ({"switch_hysteresis": 0}, "switch_hysteresis must be >= 1"),
+    ({"min_replicas": 0}, "min_replicas must be >= 1"),
+    ({"min_replicas": 3, "max_replicas": 2},
+     "max_replicas must be >= min_replicas"),
+    ({"high_rate_eps": 0}, "high_rate_eps must be > 0"),
+    ({"epoch_interval": 1}, "epoch_interval must be >= 2"),
+    ({"scale_cooldown": -1}, "scale_cooldown must be >= 0"),
+])
+def test_controller_config_bad_fields_raise(kw, match):
+    from repro.core import ControllerConfig
+    with pytest.raises(ValueError, match=match):
+        ControllerConfig(**kw)
+
+
+def test_controller_config_is_frozen():
+    from repro.core import ControllerConfig
+    cfg = ControllerConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.slo_ms = 1.0
+
+
+# ---------------------------------------------------------------------------
+# the typed metrics plane + legacy-accessor deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_metrics_snapshot_is_typed_and_frozen():
+    from repro.core import MetricsSnapshot, OpMetrics
+    build, expected = linear_pipeline()
+    eng = Engine(build(), mode="step")
+    eng.run_to_completion()
+    m = eng.metrics()
+    assert isinstance(m, MetricsSnapshot)
+    assert m.mode == "step" and m.protocol == "logio"
+    win = m.op("win")
+    assert isinstance(win, OpMetrics)
+    assert win.processed == win.events_in + win.events_out > 0
+    assert m.recovery_modes["win"] == "log"
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        win.events_in = 0
+    with pytest.raises(TypeError):
+        m.ops["win"] = win       # frozen mapping view
+
+
+def test_legacy_stats_accessors_warn_and_delegate():
+    build, expected = linear_pipeline()
+    eng = Engine(build(), mode="step")
+    eng.run_to_completion()
+    m = eng.metrics()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ps = eng.process_stats()
+        detail = eng.op_stats_detail()
+        ws = eng.wire_stats()
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 3
+    assert all("Engine.metrics()" in str(w.message) for w in deps)
+    assert ps == {op: om.processed for op, om in m.ops.items()}
+    assert detail["win"]["txns"] == m.op("win").txns
+    assert ws == {}              # step mode: no byte wire
+
+
+def test_backend_query_stats_shim_warns():
+    from repro.core.logstore import MemoryLogStore
+    store = MemoryLogStore()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        stats = store.query_stats()
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert stats == store._query_stats()

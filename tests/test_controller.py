@@ -1,0 +1,382 @@
+"""Adaptive hybrid recovery controller (repro.core.controller):
+
+  * scripted-snapshot decision tests — hysteresis on mode switching and
+    SLO scaling, driven by hand-built MetricsSnapshots (no live engine)
+  * per-group recovery-mode plumbing — epoch crash recovery is
+    exactly-once in thread AND process mode, the persisted mode record is
+    authoritative across a SIGKILL landing mid-switch
+  * end-to-end controller runs — an injected straggler makes the
+    controller switch an epoch group back to log recovery; a burst makes
+    it scale replicas up and (after the burst) down, all exactly-once
+  * BatchGovernor.stats() copy safety
+"""
+import time
+
+import pytest
+
+from repro.core import (ControllerConfig, Engine, FailureInjector,
+                        GeneratorSource, MapOperator, MetricsSnapshot,
+                        OpMetrics, Pipeline, ReadSource, TerminalSink)
+from repro.core.controller import RecoveryController
+from repro.core.scaling import Controller, DispatcherOperator, MergerOperator
+from tests.helpers import linear_pipeline, mk_store, sink_outputs
+
+
+# ---------------------------------------------------------------------------
+# scripted snapshots: deterministic decision tests without a live engine
+# ---------------------------------------------------------------------------
+
+class _StubEngine:
+    def __init__(self):
+        self.modes = {}
+        self.switches = []
+
+    def recovery_mode_of(self, group):
+        return self.modes.get(group, "log")
+
+    def set_recovery_mode(self, group, mode):
+        self.modes[group] = mode
+        self.switches.append((group, mode))
+
+    def metrics(self):
+        raise AssertionError("scripted tests must pass snapshots to tick()")
+
+
+class _StubScaler:
+    def __init__(self):
+        self.calls = []
+
+    def scale_up(self, rid):
+        self.calls.append(("up", rid))
+
+    def scale_down(self, rid):
+        self.calls.append(("down", rid))
+
+
+def _snap(ts, *, ev_in=0, commit_us=0, stall_us=0, qdepth=0):
+    ops = {"op": OpMetrics(op_id="op", group="g", events_in=ev_in,
+                           commit_us=commit_us, send_stall_us=stall_us,
+                           queue_depth=qdepth)}
+    return MetricsSnapshot(ts=ts, mode="thread", protocol="logio", ops=ops)
+
+
+def test_mode_switch_hysteresis_scripted():
+    eng = _StubEngine()
+    cfg = ControllerConfig(switch_hysteresis=2, high_rate_eps=1000.0)
+    ctl = RecoveryController(eng, cfg, mode_groups=("g",))
+    # high-rate regime: 2000 ev/s, commit path 20% of wall, no stalls
+    ctl.tick(_snap(0.0))
+    ctl.tick(_snap(1.0, ev_in=2000, commit_us=200_000))
+    assert eng.switches == []          # one agreeing sample < hysteresis
+    ctl.tick(_snap(2.0, ev_in=4000, commit_us=400_000))
+    assert eng.switches == [("g", "epoch")]
+    # straggler regime: deep queue, rate collapses — vote back to log
+    ctl.tick(_snap(3.0, ev_in=4050, commit_us=405_000, qdepth=500))
+    assert eng.switches == [("g", "epoch")]   # hysteresis holds again
+    ctl.tick(_snap(4.0, ev_in=4100, commit_us=410_000, qdepth=500))
+    assert eng.switches == [("g", "epoch"), ("g", "log")]
+    kinds = [d[1] for d in ctl.decisions]
+    assert kinds.count("mode") == 2
+
+
+def test_mode_votes_reset_on_disagreement():
+    eng = _StubEngine()
+    cfg = ControllerConfig(switch_hysteresis=2, high_rate_eps=1000.0)
+    ctl = RecoveryController(eng, cfg, mode_groups=("g",))
+    ctl.tick(_snap(0.0))
+    ctl.tick(_snap(1.0, ev_in=2000, commit_us=200_000))     # high
+    ctl.tick(_snap(2.0, ev_in=2010, commit_us=201_000))     # calm: reset
+    ctl.tick(_snap(3.0, ev_in=4010, commit_us=401_000))     # high again
+    assert eng.switches == []          # never two CONSECUTIVE high samples
+
+
+def test_stalled_downstream_does_not_vote_epoch():
+    """Send-stall time (back-pressure) means the bottleneck is downstream:
+    snapshotting this group harder would not help, so it stays on log."""
+    eng = _StubEngine()
+    cfg = ControllerConfig(switch_hysteresis=1, high_rate_eps=1000.0)
+    ctl = RecoveryController(eng, cfg, mode_groups=("g",))
+    ctl.tick(_snap(0.0))
+    ctl.tick(_snap(1.0, ev_in=2000, commit_us=200_000, stall_us=700_000))
+    assert eng.switches == []
+
+
+def test_scaling_hysteresis_and_cooldown_scripted():
+    eng = _StubEngine()
+    scaler = _StubScaler()
+    cfg = ControllerConfig(slo_ms=100.0, switch_hysteresis=2,
+                           scale_cooldown=0.0, max_replicas=2)
+    ctl = RecoveryController(eng, cfg, mode_groups=(), scaler=scaler,
+                             initial_replicas=["r0"])
+    # hot: 1000 queued, serving 100 ev/s -> residence ~10s >> 100ms SLO
+    ctl.tick(_snap(0.0))
+    ctl.tick(_snap(1.0, ev_in=100, qdepth=1000))
+    assert scaler.calls == []                      # 1 hot sample < 2
+    ctl.tick(_snap(2.0, ev_in=200, qdepth=1000))
+    assert scaler.calls == [("up", "r1")]
+    assert ctl.replicas == ["r0", "r1"]
+    # still hot, but now at max_replicas (r0 + r1 = 2)
+    ctl.tick(_snap(3.0, ev_in=300, qdepth=1000))
+    ctl.tick(_snap(4.0, ev_in=400, qdepth=1000))
+    assert scaler.calls == [("up", "r1")]
+    # cold: queue drained -> residence 0; scale-down needs 2x hysteresis
+    for i in range(3):
+        ctl.tick(_snap(5.0 + i, ev_in=500 + i))
+    assert scaler.calls == [("up", "r1")]
+    ctl.tick(_snap(9.0, ev_in=600))
+    assert scaler.calls == [("up", "r1"), ("down", "r1")]
+    assert ctl.replicas == ["r0"]
+    kinds = [d[1] for d in ctl.decisions]
+    assert kinds == ["scale_up", "scale_down"]
+
+
+def test_controller_loop_survives_sensing_errors():
+    ctl = RecoveryController(_StubEngine(),
+                             ControllerConfig(sample_interval=0.005))
+    ctl.start()
+    try:
+        deadline = time.time() + 2.0
+        while not ctl.decisions and time.time() < deadline:
+            time.sleep(0.005)
+    finally:
+        ctl.stop()
+    assert ctl.decisions and ctl.decisions[0][1] == "error"
+
+
+def test_controller_accepts_spec_string():
+    ctl = RecoveryController(_StubEngine(), "slo_ms=42,switch_hysteresis=5")
+    assert ctl.config.slo_ms == 42.0
+    assert ctl.config.switch_hysteresis == 5
+
+
+# ---------------------------------------------------------------------------
+# per-group recovery-mode plumbing: exactly-once under crashes + SIGKILL
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("point", ["pre_log", "post_log", "post_ack_log"])
+def test_epoch_mode_crash_recovery_exactly_once_thread(point):
+    build, expected = linear_pipeline(n_events=40, window=4, sink_target=10)
+    inj = FailureInjector(plan=[("map", point, 3)])
+    eng = Engine(build(), mode="thread", store=mk_store("memory"),
+                 injector=inj, restart_delay=0.01,
+                 recovery_modes={"map": "epoch", "win": "epoch"},
+                 epoch_interval=5)
+    eng.start()
+    assert eng.wait(60)
+    eng.stop()
+    assert sink_outputs(eng) == expected
+    assert eng.failures == 1
+    assert eng.metrics().recovery_modes["map"] == "epoch"
+
+
+def test_live_switch_with_crash_thread_exactly_once():
+    """log -> epoch mid-run, crash inside the epoch regime, then
+    epoch -> log: no event lost or duplicated across both switches."""
+    build, expected = linear_pipeline(n_events=60, window=4, sink_target=15)
+    inj = FailureInjector(plan=[("map", "post_log", 20)])
+    eng = Engine(build(), mode="thread", store=mk_store("memory"),
+                 injector=inj, restart_delay=0.01, epoch_interval=4)
+    eng.start()
+    eng.set_recovery_mode("map", "epoch")
+    assert eng.recovery_mode_of("map") == "epoch"
+    assert eng.wait(60)
+    eng.set_recovery_mode("map", "log")
+    assert eng.recovery_mode_of("map") == "log"
+    eng.stop()
+    assert sink_outputs(eng) == expected
+    assert eng.failures == 1
+
+
+def test_mode_record_is_authoritative_across_restart(tmp_path):
+    """The persisted mode record wins over the constructor argument on a
+    resumed engine — a controller decision survives a full engine loss
+    (the process-mode SIGKILL-mid-switch guarantee, distilled: whatever
+    the log says at recovery time is the mode the group recovers under)."""
+    db = str(tmp_path / "log.db")
+    build, expected = linear_pipeline(n_events=20, window=4, sink_target=5)
+    store = mk_store("sqlite", path=db)
+    eng = Engine(build(), mode="thread", store=store, epoch_interval=4)
+    eng.start()
+    eng.set_recovery_mode("map", "epoch")
+    assert eng.wait(30)
+    eng.stop()
+    assert sink_outputs(eng) == expected
+    store.close()
+    # fresh engine, same log, CONFLICTING constructor request: the log wins
+    store2 = mk_store("sqlite", path=db)
+    eng2 = Engine(build(), mode="thread", store=store2, resume=True,
+                  epoch_interval=4)
+    assert eng2.recovery_mode_of("map") == "epoch"
+    store2.close()
+
+
+def test_epoch_mode_sigkill_process_exactly_once(proc_ctx):
+    build, expected = linear_pipeline(n_events=40, window=4, sink_target=10,
+                                      rate=0.03)
+    eng = Engine(build(), mode="process", store=mk_store("memory"),
+                 ctx=proc_ctx, restart_delay=0.01,
+                 recovery_modes={"map": "epoch"}, epoch_interval=5)
+    eng.start()
+    time.sleep(0.5)
+    eng.kill_group("map")
+    ok = eng.wait(90)
+    eng.stop()
+    assert ok
+    assert sink_outputs(eng) == expected
+    assert eng.failures >= 1
+
+
+def test_switch_then_sigkill_process_exactly_once(proc_ctx):
+    """Switch log->epoch live, SIGKILL the group while it runs under the
+    new mode, switch back after recovery: exactly-once throughout, and
+    the group recovers under the mode recorded in the log."""
+    build, expected = linear_pipeline(n_events=60, window=4, sink_target=15,
+                                      rate=0.02)
+    eng = Engine(build(), mode="process", store=mk_store("memory"),
+                 ctx=proc_ctx, restart_delay=0.01, epoch_interval=4)
+    eng.start()
+    time.sleep(0.3)
+    eng.set_recovery_mode("map", "epoch")
+    assert eng.recovery_mode_of("map") == "epoch"
+    time.sleep(0.4)
+    eng.kill_group("map")
+    time.sleep(0.3)
+    eng.set_recovery_mode("map", "log")
+    ok = eng.wait(90)
+    eng.stop()
+    assert ok
+    assert sink_outputs(eng) == expected
+    assert eng.failures >= 1
+    assert eng.recovery_mode_of("map") == "log"
+
+
+def test_recovery_modes_rejects_bad_args():
+    build, _ = linear_pipeline()
+    with pytest.raises(ValueError, match="unknown group"):
+        Engine(build(), recovery_modes={"nope": "epoch"})
+    with pytest.raises(ValueError, match="unknown recovery mode"):
+        Engine(build(), recovery_modes={"map": "turbo"})
+    with pytest.raises(ValueError, match="epoch_interval"):
+        Engine(build(), epoch_interval=1)
+    eng = Engine(build(), mode="step")
+    with pytest.raises(ValueError, match="unknown group"):
+        eng.set_recovery_mode("nope", "epoch")
+    with pytest.raises(ValueError, match="unknown recovery mode"):
+        eng.set_recovery_mode("map", "turbo")
+
+
+def test_abs_protocol_pins_every_group_to_epoch():
+    build, _ = linear_pipeline()
+    with pytest.raises(ValueError, match="cannot be mixed"):
+        Engine(build(), protocol="abs", recovery_modes={"map": "log"})
+    eng = Engine(build(), protocol="abs")
+    assert eng.recovery_mode_of("map") == "epoch"
+    with pytest.raises(ValueError, match="fixed under protocol"):
+        eng.set_recovery_mode("map", "log")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end controller runs
+# ---------------------------------------------------------------------------
+
+def test_controller_switches_straggler_group_back_to_log():
+    """A group running in epoch mode develops a straggler (stall window on
+    its commit path): the controller must switch it back to per-event
+    logging, with exactly-once output end to end."""
+    build, expected = linear_pipeline(n_events=120, window=4, sink_target=30,
+                                      rate=0.001)
+    inj = FailureInjector(stalls=[("map", "post_log", 10, 90, 0.02)])
+    eng = Engine(build(), mode="thread", store=mk_store("memory"),
+                 injector=inj, recovery_modes={"map": "epoch"},
+                 epoch_interval=8)
+    ctl = RecoveryController(
+        eng, ControllerConfig(sample_interval=0.02, switch_hysteresis=2,
+                              high_rate_eps=100_000.0),
+        mode_groups=("map",))
+    eng.start()
+    ctl.start()
+    try:
+        assert eng.wait(60)
+    finally:
+        ctl.stop()
+        eng.stop()
+    assert sink_outputs(eng) == expected
+    assert eng.recovery_mode_of("map") == "log"
+    mode_decisions = [d for d in ctl.decisions if d[1] == "mode"]
+    assert mode_decisions and mode_decisions[0][2] == "map"
+    assert mode_decisions[0][3].startswith("log")
+
+
+def _burst_rate(off):
+    # events 20..59 arrive 20x faster than the rest (the burst)
+    return 0.002 if 20 <= off < 60 else 0.04
+
+
+def _burst_pipeline(n):
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(n)]),
+            rate_fn=_burst_rate))
+        p.add(lambda: DispatcherOperator("disp", ["r0"]))
+        p.add(lambda: MapOperator("r0", fn=lambda b: {"v": b["v"] * 2},
+                                  processing_time=0.01))
+        p.add(lambda: MergerOperator("mrg", ["r0"]))
+        p.add(lambda: TerminalSink("sink", target=n))
+        p.connect("src", "out", "disp", "in")
+        p.connect("disp", "to_r0", "r0", "in")
+        p.connect("r0", "out", "mrg", "from_r0")
+        p.connect("mrg", "out", "sink", "in")
+        return p
+    return build
+
+
+def test_controller_scales_replicas_through_burst():
+    """Diurnal-with-burst arrivals against a slow replica: the controller
+    must add at least one replica during the burst (SLO defence) and give
+    it back once the burst drains — exactly-once end to end."""
+    n = 90
+    eng = Engine(_burst_pipeline(n)(), mode="thread",
+                 store=mk_store("memory"), restart_delay=0.01)
+    scaler = Controller(
+        eng, "disp", "mrg",
+        replica_factory=lambda rid: (lambda: MapOperator(
+            rid, fn=lambda b: {"v": b["v"] * 2}, processing_time=0.01)))
+    ctl = RecoveryController(
+        eng, ControllerConfig(slo_ms=60.0, sample_interval=0.03,
+                              switch_hysteresis=2, scale_cooldown=0.2,
+                              max_replicas=3),
+        mode_groups=(), scaler=scaler, replica_prefix="x",
+        initial_replicas=["r0"])
+    eng.start()
+    ctl.start()
+    try:
+        assert eng.wait(90)
+    finally:
+        ctl.stop()
+        eng.stop()
+    assert sorted(b["v"] for b in eng.external.committed()) == \
+        sorted(2 * i for i in range(n))
+    kinds = [d[1] for d in ctl.decisions]
+    assert "scale_up" in kinds, ctl.decisions
+    assert "scale_down" in kinds, ctl.decisions
+    up = kinds.index("scale_up")
+    assert "scale_down" in kinds[up:]          # gave the replica back
+
+
+# ---------------------------------------------------------------------------
+# BatchGovernor.stats() copy safety
+# ---------------------------------------------------------------------------
+
+def test_batch_governor_stats_is_a_safe_copy():
+    from repro.core.batching import BatchGovernor
+    gov = BatchGovernor("adaptive")
+    gov.observe(8, 0.004)
+    s = gov.stats()
+    s["runs"] = 999
+    s["events"] = -1
+    s.clear()
+    fresh = gov.stats()
+    assert fresh["runs"] == 1 and fresh["events"] == 8
+    assert fresh["max_run"] == 8
+    assert gov.runs == 1 and gov.events == 8

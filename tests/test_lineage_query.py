@@ -198,10 +198,10 @@ def test_memory_pushdown_avoids_full_scans():
     key = ("win", "out", 1)
     store.reset_query_stats()
     LineageQuery(store, pushdown=False).backward(key)
-    legacy = store.query_stats()["rows_scanned"]
+    legacy = eng.metrics().store.rows_scanned
     store.reset_query_stats()
     LineageQuery(store, pushdown=True).backward(key)
-    native = store.query_stats()["rows_scanned"]
+    native = eng.metrics().store.rows_scanned
     assert native < legacy, (native, legacy)
 
 
@@ -214,17 +214,17 @@ def test_sqlite_filtered_query_uses_index_not_full_scan(tmp_path):
     store.reset_query_stats()
     ins = store.query_lineage_insets(("win", "out", 3))
     assert len(ins) == 1
-    stats = store.query_stats()
+    sm = eng.metrics().store
     # the SQL WHERE answered from the (sop, sport, eid) index: the scan
     # counter reflects returned rows, nowhere near the full table
-    assert stats["rows_scanned"] <= 2, stats
-    assert stats["rows_scanned"] < n_rows / 10
+    assert sm.rows_scanned <= 2, sm
+    assert sm.rows_scanned < n_rows / 10
     # filtered table walk restricted by sender op + ssn range
     store.reset_query_stats()
     rows = store.query_lineage(LineageFilter(ops={"win"}, ssn_min=0,
                                              ssn_max=3))
     assert {r[2] for r in rows} == {0, 1, 2, 3}
-    assert store.query_stats()["rows_scanned"] <= len(rows)
+    assert eng.metrics().store.rows_scanned <= len(rows)
 
 
 def test_segment_reader_skips_sealed_segments(tmp_path):

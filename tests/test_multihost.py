@@ -128,7 +128,7 @@ def test_spawn_tcp_midstream_kill_reconnect_replay():
                  store=_mk("sqlite+sharded+group"), restart_delay=0.05)
     eng.start()
     deadline = time.time() + 30.0
-    while eng.process_stats().get("win", 0) < 20:
+    while eng.metrics().op("win").processed < 20:
         assert time.time() < deadline, "pipeline never reached steady state"
         time.sleep(0.01)
     eng.kill_group("win")
@@ -201,17 +201,17 @@ def test_localcluster_kill_node_nonblocking():
                                    restart_delay=0.3)
     eng.start()
     deadline = time.time() + 30.0
-    while eng.process_stats().get("sink", 0) < 5:
+    while eng.metrics().op("sink").processed < 5:
         assert time.time() < deadline, "pipeline never reached steady state"
         time.sleep(0.01)
-    before = eng.process_stats().get("src", 0)
+    before = eng.metrics().op("src").processed
     cluster.kill_node("node1")                 # win + sink die with it
     assert cluster.wait_node_dead("node1")
     # node0's source must advance while node1 is down
     probe_deadline = time.time() + 1.0
     during = before
     while during <= before and time.time() < probe_deadline:
-        during = eng.process_stats().get("src", 0)
+        during = eng.metrics().op("src").processed
         time.sleep(0.005)
     ok = eng.wait(150)
     eng.stop()

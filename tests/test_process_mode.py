@@ -123,10 +123,10 @@ def test_nonblocking_recovery_other_groups_advance(proc_transport, proc_ctx):
     # wait for steady state first: spawn-context workers boot a fresh
     # interpreter each, so a fixed post-start sleep is ctx-dependent
     boot_deadline = time.time() + 30.0
-    while eng.process_stats().get("src", 0) < 10:
+    while eng.metrics().op("src").processed < 10:
         assert time.time() < boot_deadline, "pipeline never started"
         time.sleep(0.01)
-    before = eng.process_stats().get("src", 0)
+    before = eng.metrics().op("src").processed
     eng.kill_group("win")
     # poll inside the restart_delay window (win is down): the source must
     # advance at some point — a single fixed-time sample is too brittle
@@ -134,7 +134,7 @@ def test_nonblocking_recovery_other_groups_advance(proc_transport, proc_ctx):
     deadline = time.time() + 0.25
     during = before
     while during <= before and time.time() < deadline:
-        during = eng.process_stats().get("src", 0)
+        during = eng.metrics().op("src").processed
         time.sleep(0.005)
     assert eng.wait(90)
     eng.stop()
@@ -376,7 +376,7 @@ def test_blocked_sender_survives_receiver_sigkill(proc_transport, proc_ctx):
     # wait until the slow sink consumed a bit — the window is certainly
     # full and the upstream senders are blocked on credits
     deadline = time.time() + 30.0
-    while eng.process_stats().get("sink", 0) < 10:
+    while eng.metrics().op("sink").processed < 10:
         assert time.time() < deadline, "pipeline never reached steady state"
         time.sleep(0.005)
     eng.kill_group("sink")

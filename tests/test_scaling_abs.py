@@ -121,3 +121,35 @@ def test_abs_two_failures():
     assert eng.wait(40)
     assert sink_outputs(eng) == expected
     assert eng.failures == 2
+
+
+def test_abs_restart_quiesces_slow_operators():
+    """A global restart must wait for every group thread to leave its step
+    section before restoring state: a slow operator mid-step from the old
+    generation must not pollute the rebuilt WAL/offsets (would show up
+    here as a duplicated or missing value)."""
+    n = 160
+
+    def slow_mid(b):
+        if 40 <= b["v"] < 120:
+            time.sleep(0.012)
+        return {"v": b["v"] * 2}
+
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(n)]), rate=0.002))
+        p.add(lambda: MapOperator("map", fn=slow_mid))
+        p.add(lambda: TerminalSink("sink", target=n))
+        p.connect("src", "out", "map", "in")
+        p.connect("map", "out", "sink", "in")
+        return p
+
+    inj = FailureInjector([("map", "abs_input", 50), ("map", "abs_input", 90)])
+    eng = Engine(build(), mode="thread", protocol="abs", injector=inj,
+                 restart_delay=0.005, abs_options={"epoch_events": 15})
+    eng.start()
+    assert eng.wait(60)
+    assert sorted(b["v"] for b in sink_outputs(eng)) == \
+        sorted(2 * i for i in range(n))
+    assert eng.failures == 2

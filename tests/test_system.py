@@ -153,3 +153,41 @@ def test_non_replayable_source():
     bases = {o["v"] // 1000 for o in outs}
     assert len(bases) == 1
     assert sorted(o["v"] % 1000 for o in outs) == list(range(8))
+
+
+def test_slow_generate_on_final_events_not_lost():
+    """A generate slower than the idle double-check window must not race
+    the shutdown: the queued trigger (input already acked and out of the
+    channel) is live work, and its outputs must still reach a consumer
+    whose thread would otherwise have exited."""
+    import time
+
+    from repro.core import (CountWindowOperator, GeneratorSource,
+                            MapOperator, Pipeline, ReadSource, TerminalSink)
+
+    n, window = 64, 4
+
+    def slow_tail(b):
+        if b["v"] >= n - 24:            # stall the tail, incl. the final event
+            time.sleep(0.012)
+        return {"v": b["v"] * 2}
+
+    def build():
+        p = Pipeline()
+        p.add(lambda: GeneratorSource(
+            "src", ReadSource([{"v": i} for i in range(n)])))
+        p.add(lambda: MapOperator("map", fn=slow_tail))
+        p.add(lambda: CountWindowOperator(
+            "win", window, agg=lambda bs: {"s": sum(b["v"] for b in bs)}))
+        p.add(lambda: TerminalSink("sink", target=n // window))
+        p.connect("src", "out", "map", "in")
+        p.connect("map", "out", "win", "in")
+        p.connect("win", "out", "sink", "in")
+        return p
+
+    eng = Engine(build(), mode="thread")
+    eng.start()
+    assert eng.wait(30)
+    assert [o["s"] for o in sink_outputs(eng)] == [
+        sum(2 * j for j in range(i * window, (i + 1) * window))
+        for i in range(n // window)]

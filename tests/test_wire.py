@@ -298,6 +298,6 @@ def test_sigkill_mid_batch(transport, victim, point):
     assert ok, (transport, victim, point)
     assert sink_outputs(eng) == expected
     assert eng.failures == 1
-    stats = eng.wire_stats()
-    assert stats.get("frames", 0) > 0
-    assert stats.get("events", 0) > 0
+    tm = eng.metrics().transport
+    assert tm.frames > 0
+    assert tm.events > 0
